@@ -1,0 +1,47 @@
+"""End-to-end driver: train a ~100M-parameter xLSTM-family model for a few
+hundred steps with checkpointing + fault-tolerant resume.
+
+This is the deliverable-(b) end-to-end example. On this CPU container a
+step takes seconds — trim --steps for a smoke run; the same RunConfig
+lowers onto the production mesh unchanged (launch/dryrun.py).
+
+    PYTHONPATH=src python examples/train_100m.py --steps 300 [--ckpt DIR]
+"""
+import argparse
+import dataclasses
+
+from repro.configs.base import (AccelConfig, RunConfig, SHAPES_BY_NAME,
+                                get_arch)
+from repro.train.trainer import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+
+    # xlstm-350m scaled to ~100M: 16 layers, d=512 — same family/pattern
+    cfg = dataclasses.replace(
+        get_arch("xlstm-350m"), num_layers=16, d_model=512, num_heads=4,
+        num_kv_heads=4, vocab_size=50304,
+        early_exit=dataclasses.replace(get_arch("xlstm-350m").early_exit,
+                                       exit_layers=(8,)))
+    n = cfg.param_count()
+    print(f"model: {cfg.name}-100m {cfg.num_layers}L d={cfg.d_model} "
+          f"params={n/1e6:.1f}M")
+    run = RunConfig(arch=cfg, shape=SHAPES_BY_NAME["train_4k"],
+                    accel=AccelConfig(), remat="nothing",
+                    learning_rate=6e-4)
+    history = train(run, num_steps=args.steps, checkpoint_dir=args.ckpt,
+                    checkpoint_every=50, batch_override=args.batch,
+                    seq_override=args.seq, log_every=10)
+    print(f"final loss {history['loss'][-1]:.4f} "
+          f"(from {history['loss'][0]:.4f}); "
+          f"checkpoints in {args.ckpt} — rerun to resume.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""xLSTM-350M — sLSTM + mLSTM blocks [arXiv:2405.04517; unverified].
+
+xLSTM[7:1] ratio: one sLSTM block per 8 (placed last in each super-block),
+the rest mLSTM. d_ff=0 per the assignment — xLSTM blocks carry their own
+up/down projections (mLSTM proj factor 2, sLSTM gated FFN 4/3), so the
+generic FFN slot is "none". Linear-time => long_500k runs.
+"""
+from repro.configs.base import (ArchConfig, BlockSpec, EarlyExitConfig,
+                                XLSTMConfig, register_arch)
+
+_PATTERN = tuple(
+    BlockSpec("slstm" if i == 7 else "mlstm", "none") for i in range(8)
+)
+
+
+@register_arch
+def xlstm_350m() -> ArchConfig:
+    return ArchConfig(
+        name="xlstm-350m",
+        family="ssm",
+        num_layers=24,
+        d_model=1024,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=0,
+        vocab_size=50304,
+        block_pattern=_PATTERN,
+        rope="none",
+        xlstm=XLSTMConfig(),
+        early_exit=EarlyExitConfig(exit_layers=(8,), loss_weight=0.1,
+                                   entropy_threshold=0.45),
+    )

@@ -1,0 +1,164 @@
+"""Early-exit dynamic networks (DESIGN.md C5) — the paper's evaluated technique.
+
+The paper augments a transformer and a CNN with a single entropy-thresholded
+exit after the first major stage, trains with a weighted joint loss
+(exit-loss weights swept in [0.001, 0.1], entropy thresholds in [0.1, 0.5])
+and reports exit rates of 73 % (transformer, w=0.1, th=0.45) and 82 %
+(CNN, w=0.01, th=0.35).
+
+This module provides the architecture-independent pieces:
+
+  * exit heads (norm + classifier, optionally sharing the final unembedding
+    — at LM scale this is CALM-style per-token dynamic depth),
+  * normalized-entropy confidence and the exit decision,
+  * the joint multi-exit training loss,
+  * batched exit bookkeeping for serving (which sequence exited where), and
+  * compute-gating accounting hooks for `repro.core.energy` (the power-
+    manager analogue: an exited sample "power-gates" the remaining layers).
+
+The fused logits→entropy→decision path is an XAIF op ("entropy_exit") so the
+Pallas kernel can replace the reference implementation per-config.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AccelConfig, EarlyExitConfig
+from repro.core import xaif
+
+# ---------------------------------------------------------------------------
+# Confidence
+# ---------------------------------------------------------------------------
+
+
+def normalized_entropy(logits: jax.Array, axis: int = -1) -> jax.Array:
+    """Entropy of softmax(logits) normalized to [0, 1] by log(C).
+
+    The paper's thresholds (0.1–0.5) only make sense on a normalized scale —
+    raw entropy of a 65k-way softmax can reach log(65536) ≈ 11.09.
+    """
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=axis)
+    p = jnp.exp(logp)
+    ent = -jnp.sum(p * logp, axis=axis)
+    c = logits.shape[axis]
+    return ent / jnp.log(jnp.asarray(c, jnp.float32))
+
+
+def should_exit(logits: jax.Array, threshold: float, accel: Optional[AccelConfig] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Return (exit_mask, entropy). exit_mask is True where confidence is
+    sufficient (normalized entropy strictly below the threshold)."""
+    if accel is not None:
+        ent = xaif.call("entropy_exit", accel, logits)
+    else:
+        ent = normalized_entropy(logits)
+    return ent < threshold, ent
+
+
+# ---------------------------------------------------------------------------
+# Exit heads
+# ---------------------------------------------------------------------------
+
+
+def init_exit_head(key: jax.Array, d_model: int, vocab_size: int,
+                   share_unembed: bool, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    """Parameters for one exit head: an exit-specific RMSNorm scale and,
+    unless the final unembedding is shared (CALM-style), its own classifier."""
+    params = {"norm_scale": jnp.ones((d_model,), dtype)}
+    if not share_unembed:
+        k = jax.random.normal(key, (d_model, vocab_size), dtype) * (d_model ** -0.5)
+        params["unembed"] = k
+    return params
+
+
+def apply_exit_head(params: Dict[str, jax.Array], hidden: jax.Array,
+                    shared_unembed: Optional[jax.Array], accel: AccelConfig,
+                    norm_eps: float = 1e-5) -> jax.Array:
+    """hidden [..., d_model] -> exit logits [..., vocab]."""
+    x = xaif.call("rmsnorm", accel, hidden, params["norm_scale"], eps=norm_eps)
+    w = params.get("unembed", shared_unembed)
+    assert w is not None, "exit head has no classifier and no shared unembedding"
+    return xaif.call("gemm", accel, x, w)
+
+
+# ---------------------------------------------------------------------------
+# Training loss
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Token-mean CE. logits [..., C], labels [...] int32."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    mask = mask.astype(jnp.float32)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def multi_exit_loss(final_logits: jax.Array,
+                    exit_logits: Tuple[jax.Array, ...],
+                    labels: jax.Array,
+                    cfg: EarlyExitConfig,
+                    mask: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """L = CE(final) + w * mean_i CE(exit_i)   (paper §V)."""
+    l_final = cross_entropy(final_logits, labels, mask)
+    metrics = {"loss_final": l_final}
+    if not exit_logits:
+        return l_final, metrics
+    l_exits = [cross_entropy(el, labels, mask) for el in exit_logits]
+    for i, le in enumerate(l_exits):
+        metrics[f"loss_exit{i}"] = le
+    l_exit = sum(l_exits) / len(l_exits)
+    loss = l_final + cfg.loss_weight * l_exit
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Inference-side bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def merge_exit_logits(final_logits: jax.Array,
+                      exit_logits: Tuple[jax.Array, ...],
+                      cfg: EarlyExitConfig,
+                      accel: Optional[AccelConfig] = None
+                      ) -> Tuple[jax.Array, jax.Array, Dict[str, jax.Array]]:
+    """Batched early-exit selection.
+
+    Walk exits in depth order; each sample takes the FIRST confident exit's
+    logits, otherwise the final head's. Returns (selected_logits,
+    exit_layer_index, metrics). exit_layer_index is len(exit_logits) for
+    samples that ran to the end — used by the energy model to account the
+    power-gated (skipped) compute.
+    """
+    selected = final_logits
+    # depth index of the head each sample used (num_exits == ran to final)
+    n = len(exit_logits)
+    idx = jnp.full(final_logits.shape[:-1], n, jnp.int32)
+    exited = jnp.zeros(final_logits.shape[:-1], bool)
+    metrics: Dict[str, jax.Array] = {}
+    for i in reversed(range(n)):
+        mask, ent = should_exit(exit_logits[i], cfg.entropy_threshold, accel)
+        selected = jnp.where(mask[..., None], exit_logits[i], selected)
+        idx = jnp.where(mask, jnp.int32(i), idx)
+        exited = exited | mask
+        metrics[f"exit{i}_rate"] = jnp.mean(mask.astype(jnp.float32))
+        metrics[f"exit{i}_entropy"] = jnp.mean(ent)
+    metrics["exit_rate"] = jnp.mean(exited.astype(jnp.float32))
+    return selected, idx, metrics
+
+
+def gated_layer_fraction(exit_layer_idx: jax.Array, exit_layers: Tuple[int, ...],
+                         num_layers: int) -> jax.Array:
+    """Fraction of total layer-compute skipped ("power-gated") by exits —
+    feeds the energy model. exit_layer_idx [..] in [0, len(exit_layers)]."""
+    bounds = jnp.asarray(tuple(exit_layers) + (num_layers,), jnp.float32)
+    layers_run = bounds[exit_layer_idx]
+    return 1.0 - jnp.mean(layers_run) / float(num_layers)

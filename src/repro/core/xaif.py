@@ -1,0 +1,106 @@
+"""XAIF — the eXtendible Accelerator InterFace, adapted to JAX (DESIGN.md C2).
+
+X-HEEP's XAIF bundles everything an accelerator needs to plug into the host
+without RTL changes: OBI slave+master ports, DMA extension, interrupts and
+power-control signals. The JAX analogue is an *op-level backend registry*:
+
+  * an **op** is a named computational contract ("gemm", "rmsnorm",
+    "attention", "entropy_exit", "ssm_scan") with a fixed signature — the
+    "port" of the interface;
+  * a **backend** is an implementation of that contract — the pure-jnp
+    reference (the host-CPU path of the paper) or a Pallas TPU kernel (the
+    integrated accelerator); backends declare a cost model (the
+    power-management side of XAIF) used by `repro.core.energy`;
+  * model code *never* imports a kernel directly — it calls
+    ``xaif.call("gemm", accel_cfg, ...)`` and the registry dispatches based
+    on the AccelConfig, exactly like swapping an accelerator on the bus
+    without touching the host.
+
+Registering a new backend is one decorator — the "seamless integration"
+claim of the paper, transplanted.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.configs.base import AccelConfig
+
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BackendEntry:
+    op: str
+    name: str
+    fn: Callable
+    # optional cost model: (shapes...) -> dict(flops=..., hbm_bytes=...)
+    cost_fn: Optional[Callable] = None
+    description: str = ""
+    takes_interpret: bool = False
+
+
+_REGISTRY: Dict[Tuple[str, str], BackendEntry] = {}
+
+
+def register(op: str, name: str, *, cost_fn=None, description: str = ""):
+    """Decorator: register ``fn`` as backend ``name`` for ``op``."""
+
+    def deco(fn):
+        import inspect
+        takes_interpret = "interpret" in inspect.signature(fn).parameters
+        key = (op, name)
+        _REGISTRY[key] = BackendEntry(op, name, fn, cost_fn, description,
+                                      takes_interpret)
+        return fn
+
+    return deco
+
+
+def resolve(op: str, accel: AccelConfig) -> BackendEntry:
+    _ensure_builtin_backends()
+    name = accel.backend_for(op)
+    key = (op, name)
+    if key not in _REGISTRY:
+        known = sorted(n for (o, n) in _REGISTRY if o == op)
+        raise KeyError(f"no backend {name!r} for op {op!r}; known: {known}")
+    return _REGISTRY[key]
+
+
+def call(op: str, accel: AccelConfig, *args, **kwargs):
+    """Dispatch an op through the interface."""
+    entry = resolve(op, accel)
+    if entry.takes_interpret and "interpret" not in kwargs:
+        # Pallas backends take interpret= so the CPU container can run them.
+        kwargs["interpret"] = accel.interpret
+    return entry.fn(*args, **kwargs)
+
+
+def backends_for(op: str) -> Tuple[str, ...]:
+    _ensure_builtin_backends()
+    return tuple(sorted(n for (o, n) in _REGISTRY if o == op))
+
+
+def ops() -> Tuple[str, ...]:
+    _ensure_builtin_backends()
+    return tuple(sorted({o for (o, _) in _REGISTRY}))
+
+
+# ---------------------------------------------------------------------------
+# Built-in backends are registered lazily so importing xaif stays cheap and
+# cycle-free; kernels' ops.py modules call register() at import time.
+# ---------------------------------------------------------------------------
+
+_BUILTIN_LOADED = False
+
+
+def _ensure_builtin_backends():
+    global _BUILTIN_LOADED
+    if _BUILTIN_LOADED:
+        return
+    _BUILTIN_LOADED = True
+    from repro.kernels.gemm import ops as _gemm_ops              # noqa: F401
+    from repro.kernels.rmsnorm import ops as _rmsnorm_ops        # noqa: F401
+    from repro.kernels.entropy_exit import ops as _entropy_ops   # noqa: F401
+    from repro.kernels.flash_attention import ops as _fa_ops     # noqa: F401
+    from repro.kernels.ssm_scan import ops as _ssm_ops           # noqa: F401

@@ -1,0 +1,28 @@
+"""Jit'd wrapper + XAIF registration for the fused entropy-exit op."""
+from __future__ import annotations
+
+from repro.core import xaif
+from repro.kernels.entropy_exit import entropy_exit as _k
+from repro.kernels.entropy_exit import ref as _ref
+
+
+def entropy_cost(m, v, dtype_bytes=2):
+    # ref path: read logits, write logp, read logp => 3 passes; fused: 1.
+    return {"flops": 6.0 * m * v, "hbm_bytes": dtype_bytes * m * v + 4.0 * m}
+
+
+@xaif.register("entropy_exit", "ref", cost_fn=entropy_cost,
+               description="log_softmax + entropy, materialized")
+def entropy_ref_op(logits):
+    return _ref.entropy_ref(logits)
+
+
+@xaif.register("entropy_exit", "pallas", cost_fn=entropy_cost,
+               description="single-pass online-softmax entropy, blocked over vocab")
+def entropy_pallas_op(logits, *, interpret: bool = False, bm: int = 256,
+                      bv: int = 2048):
+    lead = logits.shape[:-1]
+    v = logits.shape[-1]
+    out = _k.entropy_pallas(logits.reshape(-1, v), bm=bm, bv=bv,
+                            interpret=interpret)
+    return out.reshape(lead)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused entropy-exit kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def entropy_ref(logits: jax.Array) -> jax.Array:
+    """Normalized softmax entropy over the last axis, in [0, 1]."""
+    lf = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(lf, axis=-1)
+    p = jnp.exp(logp)
+    ent = -jnp.sum(p * logp, axis=-1)
+    return ent / jnp.log(jnp.asarray(logits.shape[-1], jnp.float32))

@@ -1,0 +1,96 @@
+"""Jit'd wrapper + XAIF registration for flash attention."""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core import xaif
+from repro.kernels.flash_attention import flash_attention as _k
+from repro.kernels.flash_attention import ref as _ref
+
+
+def attention_cost(b, hq, t, s, d, dtype_bytes=2):
+    flops = 4.0 * b * hq * t * s * d
+    return {"flops": flops,
+            "hbm_bytes": dtype_bytes * b * (2 * hq * t * d + 2 * hq * s * d)}
+
+
+@xaif.register("attention", "ref", cost_fn=attention_cost,
+               description="materialized-scores attention (GQA-aware)")
+def attention_ref_op(q, k, v, causal: bool = True, scale: Optional[float] = None):
+    return _ref.attention_ref(q, k, v, causal, scale)
+
+
+@xaif.register("attention", "pallas", cost_fn=attention_cost,
+               description="blockwise flash attention, online softmax, GQA KV reuse")
+def attention_pallas_op(q, k, v, causal: bool = True,
+                        scale: Optional[float] = None, *,
+                        interpret: bool = False, bq: int = 256, bkv: int = 512):
+    return _k.flash_attention_pallas(q, k, v, causal, scale, bq=bq, bkv=bkv,
+                                     interpret=interpret)
+
+
+@xaif.register("attention", "blockwise", cost_fn=attention_cost,
+               description="pure-jnp flash attention (lax.scan over blocks); "
+                           "the dry-run/XLA path — never materializes [T,S]")
+def attention_blockwise_op(q, k, v, causal: bool = True,
+                           scale: Optional[float] = None, *,
+                           bq: int = 512, bkv: int = 1024):
+    """Online-softmax attention with O(T*blk) memory, shardable under GSPMD
+    (everything stays in [B, Hq, ...] layout). The q/kv loops are lax.scans:
+    cost_analysis counts their bodies once, so the roofline applies the
+    analytic attention correction (launch/roofline.py)."""
+    import jax
+    import jax.numpy as jnp
+
+    b, hq, t, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                       # may differ from d (MLA: 128 vs 192)
+    g = hq // hkv
+    scale_ = d ** -0.5 if scale is None else scale
+    bq_ = min(bq, t)
+    while t % bq_:
+        bq_ //= 2
+    bkv_ = min(bkv, s)
+    while s % bkv_:
+        bkv_ //= 2
+    nq, nkv = t // bq_, s // bkv_
+    qc = jnp.moveaxis(q.reshape(b, hq, nq, bq_, d), 2, 0)      # [nq,B,H,bq,d]
+    kc = jnp.moveaxis(k.reshape(b, hkv, nkv, bkv_, d), 2, 0)
+    vc = jnp.moveaxis(v.reshape(b, hkv, nkv, bkv_, dv), 2, 0)
+    offset = s - t  # causal: query t attends kv <= t + offset
+
+    def q_step(qi, carry_in):
+        qblk = carry_in.astype(jnp.float32) * scale_           # [B,H,bq,d]
+
+        def kv_step(acc, kv):
+            m_p, l_p, o_p, kj = acc
+            kblk, vblk = kv
+            kr = jnp.repeat(kblk, g, axis=1).astype(jnp.float32)
+            vr = jnp.repeat(vblk, g, axis=1).astype(jnp.float32)
+            sc = jnp.einsum("bhtd,bhsd->bhts", qblk, kr)
+            if causal:
+                qpos = qi * bq_ + jax.lax.broadcasted_iota(
+                    jnp.int32, (bq_, bkv_), 0)
+                kpos = kj * bkv_ + jax.lax.broadcasted_iota(
+                    jnp.int32, (bq_, bkv_), 1)
+                sc = jnp.where((kpos <= qpos + offset)[None, None], sc, -1e30)
+            m_n = jnp.maximum(m_p, jnp.max(sc, axis=-1, keepdims=True))
+            p = jnp.exp(sc - m_n)
+            alpha = jnp.exp(m_p - m_n)
+            l_n = l_p * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            o_n = o_p * alpha + jnp.einsum("bhts,bhsd->bhtd", p, vr)
+            return (m_n, l_n, o_n, kj + 1), None
+
+        init = (jnp.full((b, hq, bq_, 1), -1e30, jnp.float32),
+                jnp.zeros((b, hq, bq_, 1), jnp.float32),
+                jnp.zeros((b, hq, bq_, dv), jnp.float32),
+                jnp.int32(0))
+        (m_f, l_f, o_f, _), _ = jax.lax.scan(kv_step, init, (kc, vc))
+        return o_f / jnp.maximum(l_f, 1e-30)
+
+    def outer(qi, qblk):
+        return qi + 1, q_step(qi, qblk)
+
+    _, out = jax.lax.scan(outer, jnp.int32(0), qc)             # [nq,B,H,bq,dv]
+    out = jnp.moveaxis(out, 0, 2).reshape(b, hq, t, dv)
+    return out.astype(q.dtype)

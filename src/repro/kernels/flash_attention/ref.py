@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for blockwise causal attention (GQA-aware)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True, scale: Optional[float] = None) -> jax.Array:
+    """q [B, Hq, T, D], k/v [B, Hkv, S, D] with Hq % Hkv == 0 -> [B, Hq, T, D]."""
+    b, hq, t, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=1)
+    logits = jnp.einsum("bhtd,bhsd->bhts", qf, kf)
+    if causal:
+        mask = jnp.tril(jnp.ones((t, s), bool), k=s - t)
+        logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhts,bhsd->bhtd", p, vf)
+    return out.astype(q.dtype)

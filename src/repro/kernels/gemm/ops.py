@@ -1,0 +1,119 @@
+"""Jit'd wrappers + XAIF registration for the fused GEMM kernels.
+
+Model code calls ``xaif.call("gemm", accel, x, w, bias=..., activation=...)``
+with x of arbitrary leading shape [..., K]; the wrappers flatten, pad to
+block multiples, dispatch, and unpad. Backends:
+
+  * ``ref``         — pure jnp (XLA), the host-CPU path
+  * ``pallas``      — fused bf16/f32 VMEM kernel
+  * ``pallas_int8`` — fused integer kernel with on-the-fly symmetric
+                      quantization (NM-Carus "targets integer arithmetic")
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import xaif
+from repro.kernels.gemm import gemm as _k
+from repro.kernels.gemm import ref as _ref
+
+
+def _flatten(x):
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+def _pad_to(x, m, axis):
+    r = x.shape[axis] % m
+    if r == 0:
+        return x, 0
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, m - r)
+    return jnp.pad(x, pad), m - r
+
+
+def gemm_cost(m, k, n, dtype_bytes=2):
+    return {"flops": 2.0 * m * k * n,
+            "hbm_bytes": dtype_bytes * (m * k + k * n + m * n)}
+
+
+def _unpack_weight(w, dtype):
+    """Accept either a plain array or a serve-time WeightQ (int8 + scales);
+    dequantize in-line so HBM reads stay int8 (whether XLA keeps the
+    dequant fused is a measured §Perf hypothesis; the pallas_int8 kernel is
+    the guaranteed path on real TPU)."""
+    if hasattr(w, "q") and hasattr(w, "scale"):
+        return (w.q.astype(jnp.float32) * w.scale).astype(dtype)
+    return w
+
+
+@xaif.register("gemm", "ref", cost_fn=gemm_cost,
+               description="pure-jnp matmul + bias + activation")
+def gemm_ref_op(x, w, bias: Optional[jax.Array] = None, activation: str = "none"):
+    w = _unpack_weight(w, x.dtype)
+    return _ref.gemm_ref(x, w, bias, activation)
+
+
+@xaif.register("gemm", "pallas", cost_fn=gemm_cost,
+               description="fused VMEM-resident GEMM (bias+act, one HBM write)")
+def gemm_pallas_op(x, w, bias: Optional[jax.Array] = None,
+                   activation: str = "none", *, interpret: bool = False,
+                   bm: int = 128, bn: int = 128, bk: int = 512):
+    w = _unpack_weight(w, x.dtype)
+    x2, lead = _flatten(x)
+    m, k = x2.shape
+    n = w.shape[-1]
+    # pad all three dims to hardware-aligned multiples
+    bm_, bn_, bk_ = min(bm, _ceil_mult(m)), min(bn, _ceil_mult(n)), min(bk, _ceil_mult(k))
+    x2, pm = _pad_to(x2, bm_, 0)
+    x2, pk = _pad_to(x2, bk_, 1)
+    wp, _ = _pad_to(w, bk_, 0)
+    wp, pn = _pad_to(wp, bn_, 1)
+    bp = None
+    if bias is not None:
+        bp, _ = _pad_to(bias, bn_, 0)
+    out = _k.gemm_pallas(x2, wp, bp, activation, bm=bm_, bn=bn_, bk=bk_,
+                         interpret=interpret)
+    out = out[: m, : n]
+    return out.reshape(*lead, n)
+
+
+@xaif.register("gemm", "pallas_int8", cost_fn=gemm_cost,
+               description="fused int8 GEMM, int32 acc, fused dequant (NM-Carus path)")
+def gemm_int8_pallas_op(x, w, bias: Optional[jax.Array] = None,
+                        activation: str = "none", *, interpret: bool = False,
+                        bm: int = 128, bn: int = 128, bk: int = 512):
+    x2, lead = _flatten(x)
+    m, k = x2.shape
+    xq, xs = _ref.quantize_int8(x2, axis=-1)          # per-row
+    if hasattr(w, "q") and hasattr(w, "scale"):
+        # serve-time pre-quantized weights: consume the int8 tiles directly
+        wq, ws = w.q, w.scale.reshape(1, -1)
+    else:
+        wq, ws = _ref.quantize_int8(w, axis=0)        # per-column
+    n = wq.shape[-1]
+    bm_, bn_, bk_ = min(bm, _ceil_mult(m)), min(bn, _ceil_mult(n)), min(bk, _ceil_mult(k))
+    xq, _ = _pad_to(xq, bm_, 0)
+    xq, _ = _pad_to(xq, bk_, 1)
+    xs, _ = _pad_to(xs, bm_, 0)
+    wq, _ = _pad_to(wq, bk_, 0)
+    wq, _ = _pad_to(wq, bn_, 1)
+    ws, _ = _pad_to(ws, bn_, 1)
+    bp = None
+    if bias is not None:
+        bp, _ = _pad_to(bias.astype(jnp.float32), bn_, 0)
+    out = _k.gemm_int8_pallas(xq, wq, xs, ws, bp, activation, bm=bm_, bn=bn_,
+                              bk=bk_, out_dtype=x.dtype, interpret=interpret)
+    out = out[: m, : n]
+    return out.reshape(*lead, n)
+
+
+def _ceil_mult(dim: int, base: int = 128) -> int:
+    """Largest power-of-two block <= base that keeps tiny dims legal."""
+    b = base
+    while b > dim and b > 8:
+        b //= 2
+    return b

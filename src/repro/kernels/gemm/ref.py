@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the fused GEMM kernel (the paper's "CPU-only" path)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+ACTIVATIONS = {
+    "none": lambda x: x,
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+}
+
+
+def gemm_ref(x: jax.Array, w: jax.Array, bias: Optional[jax.Array] = None,
+             activation: str = "none") -> jax.Array:
+    """x [..., K] @ w [K, N] (+ bias) -> activation, fp32 accumulate."""
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    out = ACTIVATIONS[activation](out)
+    return out.astype(x.dtype)
+
+
+def quantize_int8(x: jax.Array, axis: int = -1):
+    """Symmetric per-row int8 quantization: returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def gemm_int8_ref(xq: jax.Array, wq: jax.Array, x_scale: jax.Array,
+                  w_scale: jax.Array, bias: Optional[jax.Array] = None,
+                  activation: str = "none", out_dtype=jnp.bfloat16) -> jax.Array:
+    """Integer GEMM with int32 accumulate and fused dequant (NM-Carus targets
+    integer arithmetic — this is the faithful numeric path).
+
+    xq [M, K] int8, wq [K, N] int8, x_scale [M, 1], w_scale [1, N].
+    """
+    acc = jnp.dot(xq.astype(jnp.int32), wq.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    out = acc.astype(jnp.float32) * x_scale.astype(jnp.float32) * w_scale.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    out = ACTIVATIONS[activation](out)
+    return out.astype(out_dtype)

@@ -1,0 +1,36 @@
+"""Jit'd wrapper + XAIF registration for fused RMSNorm."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import xaif
+from repro.kernels.rmsnorm import ref as _ref
+from repro.kernels.rmsnorm import rmsnorm as _k
+
+
+def rmsnorm_cost(m, d, dtype_bytes=2):
+    return {"flops": 4.0 * m * d, "hbm_bytes": 2.0 * dtype_bytes * m * d}
+
+
+@xaif.register("rmsnorm", "ref", cost_fn=rmsnorm_cost,
+               description="pure-jnp RMSNorm")
+def rmsnorm_ref_op(x, scale, eps: float = 1e-5):
+    return _ref.rmsnorm_ref(x, scale, eps)
+
+
+@xaif.register("rmsnorm", "pallas", cost_fn=rmsnorm_cost,
+               description="fused single-pass VMEM RMSNorm")
+def rmsnorm_pallas_op(x, scale, eps: float = 1e-5, *, interpret: bool = False,
+                      bm: int = 256):
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    x2 = x.reshape(-1, d)
+    m = x2.shape[0]
+    bm_ = bm
+    while m % bm_ != 0:                      # shrink block to a divisor
+        bm_ //= 2
+        if bm_ == 0:
+            bm_ = 1
+            break
+    out = _k.rmsnorm_pallas(x2, scale, eps, bm=bm_, interpret=interpret)
+    return out.reshape(*lead, d)

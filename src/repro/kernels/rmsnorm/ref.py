@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for fused RMSNorm."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)

@@ -1,0 +1,41 @@
+"""Fused RMSNorm Pallas TPU kernel.
+
+One HBM read, one HBM write per element: the mean-square reduction, rsqrt
+and scale all happen on the VMEM-resident tile (XLA's unfused path writes
+the normalized intermediate before the scale multiply). Rows are blocked;
+the feature dim stays whole so the reduction needs no cross-block pass —
+d_model <= 16k in fp32 is a 64 KiB row, bm=256 rows => <=16 MiB working set
+at d=16k, ~3 MiB at d=4k.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps) * s_ref[...].astype(jnp.float32)
+                  ).astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(x: jax.Array, scale: jax.Array, eps: float = 1e-5, *,
+                   bm: int = 256, interpret: bool = False) -> jax.Array:
+    m, d = x.shape
+    bm = min(bm, m)
+    assert m % bm == 0, (m, bm)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=interpret,
+    )(x, scale.reshape(1, d))

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the Mamba selective scan."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(u: jax.Array, dt: jax.Array, a: jax.Array,
+                       b: jax.Array, c: jax.Array, d: jax.Array,
+                       h0: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential-scan oracle for the selective SSM.
+
+    u, dt [B, T, Din]; a [Din, N]; b, c [B, T, N]; d [Din];
+    h0 [B, Din, N] or None.  Returns (y [B, T, Din], h_T [B, Din, N]).
+
+        h_t = exp(dt_t * a) * h_{t-1} + (dt_t * u_t) * b_t
+        y_t = (h_t * c_t).sum(-1) + d * u_t
+    """
+    bsz, t, din = u.shape
+    n = a.shape[-1]
+    uf, dtf = u.astype(jnp.float32), dt.astype(jnp.float32)
+    bf, cf = b.astype(jnp.float32), c.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    h = jnp.zeros((bsz, din, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, xs):
+        u_t, dt_t, b_t, c_t = xs                     # [B,Din],[B,Din],[B,N],[B,N]
+        da = jnp.exp(dt_t[..., None] * af)           # [B, Din, N]
+        db = (dt_t * u_t)[..., None] * b_t[:, None, :]
+        h = da * h + db
+        y = jnp.sum(h * c_t[:, None, :], axis=-1)    # [B, Din]
+        return h, y
+
+    xs = (jnp.moveaxis(uf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0))
+    h_final, ys = jax.lax.scan(step, h, xs)
+    y = jnp.moveaxis(ys, 0, 1) + d.astype(jnp.float32) * uf
+    return y.astype(u.dtype), h_final

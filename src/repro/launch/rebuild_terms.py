@@ -1,0 +1,52 @@
+"""Recompute roofline terms in experiments/dryrun/*.json from the stored
+component costs, after corrections-logic changes (no recompilation).
+
+    PYTHONPATH=src python -m repro.launch.rebuild_terms
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs.base import SHAPES_BY_NAME, get_arch
+from repro.launch import roofline as rl
+
+DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "experiments", "dryrun")
+
+
+def main():
+    d = os.path.abspath(DIR)
+    for f in sorted(os.listdir(d)):
+        if not f.endswith(".json"):
+            continue
+        path = os.path.join(d, f)
+        data = json.load(open(path))
+        if data.get("status") != "ok" or "component_costs" not in data:
+            continue
+        arch = get_arch(data["arch"])
+        shape = SHAPES_BY_NAME[data["shape"]]
+        chips = data["chips"]
+        cc = data["component_costs"]
+        total = {"flops": 0.0, "bytes": 0.0, "coll_bytes": 0.0}
+        for name, c in cc["components"].items():
+            total["flops"] += c["flops"] * c["mult"]
+            total["bytes"] += c["bytes"] * c["mult"]
+            total["coll_bytes"] += c["coll"] * c["mult"]
+        corr = rl.loop_corrections(arch, shape, chips=chips)
+        total["flops"] += corr["flops"]
+        total["bytes"] = max(total["bytes"] + corr["bytes"], 0.0)
+        cc["corrections"] = corr
+        cc["total"] = total
+        terms = rl.derive_terms(arch, shape, data["mesh"], chips,
+                                {"flops": total["flops"],
+                                 "bytes accessed": total["bytes"]},
+                                {"total": total["coll_bytes"]})
+        data["roofline"] = terms.to_dict()
+        json.dump(data, open(path, "w"), indent=2, default=float)
+        print(f, "->", data["roofline"]["dominant"],
+              f"{data['roofline']['roofline_fraction']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun/*.json.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+
+def load(dir_: str) -> List[Dict]:
+    rows = []
+    for f in sorted(os.listdir(dir_)):
+        if f.endswith(".json"):
+            d = json.load(open(os.path.join(dir_, f)))
+            d["_file"] = f
+            rows.append(d)
+    return rows
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(rows) -> str:
+    out = ["| arch | shape | mesh | status | compile s | args GiB/chip | temp GiB/chip | collectives (full module) |",
+           "|---|---|---|---|---|---|---|---|"]
+    for d in rows:
+        if d.get("tag"):
+            continue
+        mem = (d.get("full_module") or {}).get("memory") or {}
+        coll = (d.get("full_module") or {}).get("collectives") or {}
+        ctxt = " ".join(f"{k}:{v/2**30:.2f}G" for k, v in sorted(coll.items())
+                        if k != "total")
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | {d['status']} | "
+            f"{d.get('compile_s', 0):.1f} | "
+            f"{fmt_bytes(mem.get('argument_bytes', 0))} | "
+            f"{fmt_bytes(mem.get('temp_bytes', 0))} | {ctxt} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows, mesh="single") -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | dominant | roofline frac | useful FLOPs ratio |",
+           "|---|---|---|---|---|---|---|---|"]
+    for d in rows:
+        if d.get("tag") or d.get("mesh") != mesh or "roofline" not in d:
+            continue
+        r = d["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['roofline_fraction']:.4f} | "
+            f"{r['useful_flops_ratio']:.3f} |")
+    return "\n".join(out)
+
+
+def perf_variants_table(rows) -> str:
+    tagged = [d for d in rows if d.get("tag") and "roofline" in d]
+    if not tagged:
+        return "(no perf variants yet)"
+    out = ["| arch | shape | mesh | variant | policy | dominant | bound s | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for d in tagged:
+        r = d["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {d['mesh']} | {d['tag']} | "
+            f"{d.get('policy') or 'baseline'} | {r['dominant']} | "
+            f"{bound:.3e} | {r['roofline_fraction']:.4f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    ok = sum(1 for d in rows if d.get("status") == "ok" and not d.get("tag"))
+    err = [d["_file"] for d in rows if d.get("status") != "ok"]
+    print(f"## Dry-run: {ok} cells ok, {len(err)} failed {err or ''}\n")
+    print(dryrun_table(rows))
+    print("\n## Roofline (single pod, 256 chips)\n")
+    print(roofline_table(rows, "single"))
+    print("\n## Roofline (multi pod, 512 chips)\n")
+    print(roofline_table(rows, "multi"))
+    print("\n## Perf variants\n")
+    print(perf_variants_table(rows))
+
+
+if __name__ == "__main__":
+    main()

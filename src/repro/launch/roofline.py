@@ -1,0 +1,278 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Per (arch x shape x mesh) cell:
+
+  compute term    = HLO_FLOPs_per_chip / peak_FLOP/s          [s]
+  memory term     = HLO_bytes_per_chip / HBM_bw               [s]
+  collective term = collective_bytes_per_chip / link_bw       [s]
+
+HLO FLOPs/bytes come from ``compiled.cost_analysis()`` (the post-SPMD,
+per-device module). Collective bytes are NOT in cost_analysis: we parse the
+optimized HLO text and sum the RESULT-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute instruction
+(result bytes ~= payload a chip must move for that op; documented proxy).
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+MODEL_FLOPS uses the 6ND (train) / 2ND (inference) convention on ACTIVE
+params, plus explicit attention-scores FLOPs (which 6ND misses and which
+dominate long-context cells).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:\([^\n]*?replica_groups=\[(\d+),(\d+)\])?",
+    re.MULTILINE)
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|u32|s16|u16|s8|u8|pred)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "f32": 4, "s32": 4, "u32": 4, "bf16": 2,
+                "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-chip payload bytes per collective kind from optimized HLO.
+
+    all-gather / all-reduce / all-to-all / permute: result bytes ~= what a
+    chip must move. reduce-scatter RESULTS are 1/participants of the
+    payload, so they are scaled back up by the replica-group size.
+    """
+    out: Dict[str, float] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        byts = _shape_bytes(shape_str)
+        if kind == "reduce-scatter" and m.group(4):
+            byts *= int(m.group(4))
+        out[kind] = out.get(kind, 0.0) + byts
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (useful-work floor)
+# ---------------------------------------------------------------------------
+
+
+def attention_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """Score+value FLOPs of the attention layers (6ND misses these)."""
+    n_attn = sum(1 for i in range(cfg.num_layers)
+                 if cfg.layer_spec(i).mixer == "attn")
+    if cfg.mla is not None:
+        dh = cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim
+        dv = cfg.mla.v_head_dim
+    else:
+        dh = dv = cfg.head_dim
+    b, t = shape.global_batch, shape.seq_len
+    hq = cfg.num_heads
+    if shape.kind == "decode":
+        # one query against S cached keys
+        return n_attn * 2.0 * b * hq * (dh + dv) * t
+    # causal full-sequence: ~T^2/2 scores
+    return n_attn * 2.0 * b * hq * (dh + dv) * t * t / 2.0
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    flops = mult * n_active * tokens
+    attn = attention_flops(cfg, shape)
+    if shape.kind == "train":
+        attn *= 3.0  # fwd + bwd(2x)
+    return flops + attn
+
+
+# ---------------------------------------------------------------------------
+# Analytic corrections for sequential loops (XLA cost_analysis counts
+# while/scan bodies ONCE — verified empirically; see dryrun.py docstring).
+# Each correction adds trip_count-scaled loop-body cost minus the
+# one-counted body, i.e. full_cost * (trips - 1) / trips.
+# ---------------------------------------------------------------------------
+
+import math
+
+
+def _layer_counts(cfg: ArchConfig):
+    counts = {"attn": 0, "mamba": 0, "mlstm": 0, "slstm": 0}
+    for i in range(cfg.num_layers):
+        counts[cfg.layer_spec(i).mixer] += 1
+    return counts
+
+
+def loop_corrections(cfg: ArchConfig, shape: ShapeConfig, chips: int,
+                     *, attn_bq: int = 512, attn_bkv: int = 1024,
+                     ssm_chunk: int = 512) -> Dict[str, float]:
+    """PER-CHIP flops/bytes to add to component-aggregated costs.
+
+    decode shapes need none (their mixers lower loop-free); train costs are
+    3x forward (fwd + ~2x bwd, the 6ND convention).
+    """
+    out = {"flops": 0.0, "bytes": 0.0}
+    if shape.kind == "decode":
+        # HloCostAnalysis charges a dynamic-update-slice FULL operand +
+        # result bytes, but the one-token cache insert touches one slice:
+        # subtract the phantom full-cache read+write per attention layer
+        # (k and v, or the MLA latents). Real traffic (the one cache READ
+        # by the attention einsum) stays counted.
+        counts = _layer_counts(cfg)
+        b, s = shape.global_batch, shape.seq_len
+        # caches shard over the data axes (batch, or kv_seq when B==1)
+        data_shards = 16 if chips <= 256 else 32
+        if counts["attn"]:
+            if cfg.mla is not None:
+                row = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+                cache_layer = b * s * row * 2.0                   # bf16
+            else:
+                cache_layer = b * cfg.num_kv_heads * s * cfg.head_dim * 2.0 * 2
+            out["bytes"] -= counts["attn"] * 2.0 * cache_layer / data_shards
+        return out
+    mult = 3.0 if shape.kind == "train" else 1.0
+    b, t = shape.global_batch, shape.seq_len
+    counts = _layer_counts(cfg)
+    fl = 0.0
+    byts = 0.0
+
+    if counts["attn"]:
+        nq = max(t // attn_bq, 1)
+        nkv = max(t // attn_bkv, 1)
+        frac = 1.0 - 1.0 / (nq * nkv)
+        fl += attention_flops(cfg, shape) * frac
+        # flash KV rereads: each q block streams the full K and V
+        if cfg.mla is not None:
+            kv_row = cfg.num_heads * (cfg.mla.qk_nope_head_dim
+                                      + cfg.mla.v_head_dim)
+        else:
+            kv_row = cfg.num_kv_heads * cfg.head_dim * 2
+        byts += counts["attn"] * b * nq * t * kv_row * 2.0 * frac
+
+    if counts["mamba"] and cfg.mamba is not None:
+        din = cfg.mamba.expand * cfg.d_model
+        n = cfg.mamba.d_state
+        nch = max(t // ssm_chunk, 1)
+        frac = 1.0 - 1.0 / nch
+        per_layer = (6.0 + 3.0 * math.log2(max(ssm_chunk, 2))) * b * t * din * n
+        fl += counts["mamba"] * per_layer * frac
+        byts += counts["mamba"] * b * t * (3 * din + 2 * n) * 4.0 * frac
+
+    if counts["mlstm"] and cfg.xlstm is not None:
+        d_in = int(cfg.xlstm.mlstm_proj_factor * cfg.d_model)
+        h = cfg.num_heads
+        dh = d_in // h
+        lch = cfg.xlstm.chunk_size
+        nch = max(t // lch, 1)
+        frac = 1.0 - 1.0 / nch
+        per_layer = 4.0 * b * h * t * dh * dh + 4.0 * b * h * t * lch * dh
+        fl += counts["mlstm"] * per_layer * frac
+        byts += counts["mlstm"] * 6.0 * b * t * d_in * 2.0 * frac
+
+    if counts["slstm"]:
+        d = cfg.d_model
+        frac = 1.0 - 1.0 / max(t, 2)
+        per_layer = (8.0 * b * t * d * d + 30.0 * b * t * d)
+        fl += counts["slstm"] * per_layer * frac
+        byts += counts["slstm"] * 10.0 * b * t * d * 4.0 * frac
+
+    out["flops"] = fl * mult / chips
+    out["bytes"] = byts * mult / chips
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Terms
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float            # per chip
+    hlo_bytes: float            # per chip
+    coll_bytes: float           # per chip
+    model_flops_global: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the bounding time spent at peak useful compute:
+        MODEL_FLOPS / (chips * peak * bound_time). 1.0 == perfect MFU."""
+        if self.bound_s <= 0:
+            return 0.0
+        return (self.model_flops_global / self.chips / PEAK_FLOPS
+                / self.bound_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        if self.hlo_flops <= 0:
+            return 0.0
+        return self.model_flops_global / self.chips / self.hlo_flops
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops_per_chip": self.hlo_flops,
+            "hlo_bytes_per_chip": self.hlo_bytes,
+            "collective_bytes_per_chip": self.coll_bytes,
+            "model_flops_global": self.model_flops_global,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "roofline_fraction": self.roofline_fraction,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def derive_terms(arch: ArchConfig, shape: ShapeConfig, mesh_name: str,
+                 chips: int, cost: Dict, coll: Dict[str, float],
+                 ) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cb = float(coll.get("total", 0.0))
+    return RooflineTerms(
+        arch=arch.name, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts, coll_bytes=cb,
+        model_flops_global=model_flops(arch, shape),
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=byts / HBM_BW,
+        collective_s=cb / LINK_BW,
+    )

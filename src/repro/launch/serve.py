@@ -1,0 +1,46 @@
+"""Serving launcher: batched early-exit generation on a (reduced) arch.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch chatglm3-6b \
+        --batch 8 --new-tokens 16 [--gated]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import (AccelConfig, RunConfig, SHAPES_BY_NAME,
+                                get_arch, list_archs)
+from repro.models import lm
+from repro.serve.engine import generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--threshold", type=float, default=None)
+    ap.add_argument("--gated", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    if args.threshold is not None:
+        cfg = dataclasses.replace(cfg, early_exit=dataclasses.replace(
+            cfg.early_exit, entropy_threshold=args.threshold))
+    run = RunConfig(arch=cfg, shape=SHAPES_BY_NAME["decode_32k"],
+                    accel=AccelConfig())
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size)
+    gated = args.gated and all(b.mixer == "attn" for b in cfg.block_pattern)
+    tokens, stats = generate(run, params, prompt,
+                             max_new_tokens=args.new_tokens, gated=gated)
+    print(f"served batch={args.batch}: tokens {tokens.shape}; stats {stats}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""ShapeDtypeStruct stand-ins for every model input — shardable, weak-type
+correct, zero allocation. The dry-run lowers against exactly these.
+
+For ``frontend_stub`` archs ([audio]/[vlm]) the model input is precomputed
+frame/patch EMBEDDINGS [B, T, d_model] (the modality frontend is stubbed per
+the assignment); labels remain codebook/vocab ids.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import lm
+
+SDS = jax.ShapeDtypeStruct
+
+
+def token_struct(arch: ArchConfig, batch: int, seq: int):
+    if arch.frontend_stub:
+        return SDS((batch, seq, arch.d_model), jnp.dtype(arch.dtype))
+    return SDS((batch, seq), jnp.int32)
+
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """All inputs for the cell's step function (train batch, or serve
+    request batch + cache), as ShapeDtypeStructs."""
+    b, t = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {
+            "inputs": token_struct(arch, b, t),
+            "labels": SDS((b, t), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        return {
+            "tokens": token_struct(arch, b, t),
+            "cache": jax.eval_shape(
+                functools.partial(lm.init_cache, arch, b, t)),
+        }
+    # decode: one new token against a cache of seq_len
+    return {
+        "tokens": token_struct(arch, b, 1),
+        "cache": jax.eval_shape(functools.partial(lm.init_cache, arch, b, t)),
+    }

@@ -1,0 +1,278 @@
+"""Attention mixers: MHA/GQA (bias, qk-norm, full/partial rotary) and
+DeepSeek-V2 Multi-head Latent Attention (MLA).
+
+Three execution modes share one parameter set:
+  * train / prefill: full-sequence causal attention via the XAIF
+    "attention" op (flash kernel or jnp reference);
+  * decode: one query token against a KV cache; the reference einsum keeps
+    KV in its grouped [B, Hkv, S, D] layout (no head replication — the
+    bandwidth point of GQA) and masks by per-sequence cache length.
+
+MLA caches only the compressed latent (c_kv, k_rope) — the 93.3 % KV-cache
+reduction that is the point of the architecture — and uses the absorbed
+formulation at decode so the latent is attended directly.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AccelConfig, ArchConfig
+from repro.core import xaif
+from repro.models.layers import apply_rope, dense_init, init_rmsnorm, rope_dims
+
+# ---------------------------------------------------------------------------
+# KV caches
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array            # [B, Hkv, S, D]
+    v: jax.Array            # [B, Hkv, S, D]
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array         # [B, S, kv_lora_rank]
+    k_rope: jax.Array       # [B, S, rope_dim]
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> KVCache:
+    shape = (batch, cfg.num_kv_heads, max_len, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> MLACache:
+    m = cfg.mla
+    return MLACache(
+        jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ArchConfig, dtype) -> Dict:
+    d, hq, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, hq * dh, dtype),
+        "wk": dense_init(ks[1], d, hkv * dh, dtype),
+        "wv": dense_init(ks[2], d, hkv * dh, dtype),
+        "wo": dense_init(ks[3], hq * dh, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(dh)
+        p["k_norm"] = init_rmsnorm(dh)
+    return p
+
+
+def _project_qkv(params, x, cfg: ArchConfig, accel: AccelConfig,
+                 positions: jax.Array):
+    b, t, d = x.shape
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = xaif.call("gemm", accel, x, params["wq"], bias=params.get("bq"))
+    k = xaif.call("gemm", accel, x, params["wk"], bias=params.get("bk"))
+    v = xaif.call("gemm", accel, x, params["wv"], bias=params.get("bv"))
+    q = q.reshape(b, t, hq, dh).transpose(0, 2, 1, 3)     # [B, Hq, T, D]
+    k = k.reshape(b, t, hkv, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, hkv, dh).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        from repro.models.layers import rmsnorm
+        q = rmsnorm(params["q_norm"], q, accel, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, accel, cfg.norm_eps)
+    rd = rope_dims(cfg)
+    if rd != 0:
+        q = apply_rope(q, positions, cfg.rope_theta, rd)
+        k = apply_rope(k, positions, cfg.rope_theta, rd)
+    return q, k, v
+
+
+def apply_attention(params, x, cfg: ArchConfig, accel: AccelConfig,
+                    positions: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence causal path (train / prefill). x [B, T, d]."""
+    b, t, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(t)
+    q, k, v = _project_qkv(params, x, cfg, accel, positions)
+    out = xaif.call("attention", accel, q, k, v, causal=True)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, cfg.num_heads * cfg.head_dim)
+    return xaif.call("gemm", accel, out, params["wo"])
+
+
+def apply_attention_prefill(params, x, cfg, accel, cache: KVCache
+                            ) -> Tuple[jax.Array, KVCache]:
+    """Prefill: as train, but also writes the produced K/V into the cache."""
+    b, t, _ = x.shape
+    positions = jnp.arange(t)
+    q, k, v = _project_qkv(params, x, cfg, accel, positions)
+    out = xaif.call("attention", accel, q, k, v, causal=True)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, cfg.num_heads * cfg.head_dim)
+    new_cache = KVCache(
+        jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0)),
+        jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0)),
+    )
+    return xaif.call("gemm", accel, out, params["wo"]), new_cache
+
+
+def apply_attention_decode(params, x, cfg: ArchConfig, accel: AccelConfig,
+                           cache: KVCache, cache_pos: jax.Array
+                           ) -> Tuple[jax.Array, KVCache]:
+    """One-token decode. x [B, 1, d]; cache_pos [B] = current length (the new
+    token's position). Grouped-KV einsum, no head replication."""
+    b = x.shape[0]
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = hq // hkv
+    q, k, v = _project_qkv(params, x, cfg, accel, cache_pos[:, None])
+    # write the new K/V at each sequence's position
+    bidx = jnp.arange(b)
+    ck = cache.k.at[bidx, :, cache_pos, :].set(k[:, :, 0, :].astype(cache.k.dtype))
+    cv = cache.v.at[bidx, :, cache_pos, :].set(v[:, :, 0, :].astype(cache.v.dtype))
+    s = ck.shape[2]
+    qg = (q.reshape(b, hkv, g, dh) * (dh ** -0.5)).astype(ck.dtype)
+    # decode is HBM-bound on the cache: keep the einsum operands in the
+    # cache dtype (bf16) and accumulate fp32 on the MXU — an .astype(f32)
+    # on ck/cv would MATERIALIZE a full fp32 copy of the KV cache per layer
+    # (measured: 3.8 GB/layer/chip -> §Perf iteration C1)
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qg, ck,
+                        preferred_element_type=jnp.float32)
+    valid = jnp.arange(s)[None, :] <= cache_pos[:, None]   # [B, S]
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p.astype(cv.dtype), cv,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, hq * dh).astype(x.dtype)
+    return xaif.call("gemm", accel, out, params["wo"]), KVCache(ck, cv)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ArchConfig, dtype) -> Dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    dqk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        # queries (full-rank here; q_lora_rank=0 for the -Lite config)
+        "wq": dense_init(ks[0], d, h * dqk, dtype),
+        # compressed KV latent + shared rotary key
+        "w_dkv": dense_init(ks[1], d, m.kv_lora_rank, dtype),
+        "kv_norm": init_rmsnorm(m.kv_lora_rank),
+        "w_kr": dense_init(ks[2], d, m.qk_rope_head_dim, dtype),
+        # up-projections from the latent
+        "w_uk": dense_init(ks[3], m.kv_lora_rank, h * m.qk_nope_head_dim, dtype),
+        "w_uv": dense_init(ks[4], m.kv_lora_rank, h * m.v_head_dim, dtype),
+        "wo": dense_init(ks[5], h * m.v_head_dim, d, dtype),
+    }
+    return p
+
+
+def _mla_latent(params, x, cfg, accel, positions):
+    """Shared first stage: compressed latent + rotary key."""
+    from repro.models.layers import rmsnorm
+    m = cfg.mla
+    c_kv = xaif.call("gemm", accel, x, params["w_dkv"])
+    c_kv = rmsnorm(params["kv_norm"], c_kv, accel, cfg.norm_eps)
+    k_rope = xaif.call("gemm", accel, x, params["w_kr"])   # [B, T, rd]
+    k_rope = apply_rope(k_rope[:, None], positions, cfg.rope_theta)[:, 0]
+    return c_kv, k_rope
+
+
+def _mla_queries(params, x, cfg, accel, positions):
+    m = cfg.mla
+    b, t, _ = x.shape
+    h = cfg.num_heads
+    dqk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = xaif.call("gemm", accel, x, params["wq"])
+    q = q.reshape(b, t, h, dqk).transpose(0, 2, 1, 3)      # [B, H, T, dqk]
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def apply_mla(params, x, cfg: ArchConfig, accel: AccelConfig,
+              positions: Optional[jax.Array] = None,
+              cache: Optional[MLACache] = None
+              ) -> Tuple[jax.Array, Optional[MLACache]]:
+    """Train / prefill MLA: decompress K/V per head, causal attention."""
+    m = cfg.mla
+    b, t, _ = x.shape
+    h = cfg.num_heads
+    if positions is None:
+        positions = jnp.arange(t)
+    c_kv, k_rope = _mla_latent(params, x, cfg, accel, positions)
+    q_nope, q_rope = _mla_queries(params, x, cfg, accel, positions)
+    # decompress keys/values: [B, T, H, dn] / [B, T, H, dv]
+    k_nope = xaif.call("gemm", accel, c_kv, params["w_uk"]).reshape(
+        b, t, h, m.qk_nope_head_dim).transpose(0, 2, 1, 3)
+    v = xaif.call("gemm", accel, c_kv, params["w_uv"]).reshape(
+        b, t, h, m.v_head_dim).transpose(0, 2, 1, 3)
+    # assemble full q/k with the shared rotary part broadcast over heads
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, None], (b, h, t, m.qk_rope_head_dim))],
+        axis=-1)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    out = xaif.call("attention", accel, q, k, v.astype(q.dtype), causal=True,
+                    scale=scale)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, h * m.v_head_dim)
+    new_cache = None
+    if cache is not None:
+        new_cache = MLACache(
+            jax.lax.dynamic_update_slice(
+                cache.c_kv, c_kv.astype(cache.c_kv.dtype), (0, 0, 0)),
+            jax.lax.dynamic_update_slice(
+                cache.k_rope, k_rope.astype(cache.k_rope.dtype), (0, 0, 0)),
+        )
+    return xaif.call("gemm", accel, out, params["wo"]), new_cache
+
+
+def apply_mla_decode(params, x, cfg: ArchConfig, accel: AccelConfig,
+                     cache: MLACache, cache_pos: jax.Array
+                     ) -> Tuple[jax.Array, MLACache]:
+    """Absorbed-matrix decode: attend the compressed latent directly.
+
+    score(t, s) = q_nope_t^T W_uk c_s + q_rope_t^T k_rope_s
+                = (W_uk^T q_nope_t)^T c_s + ...  — so per step we project the
+    query into latent space once and never decompress the cache.
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.num_heads
+    positions = cache_pos[:, None]
+    c_new, kr_new = _mla_latent(params, x, cfg, accel, positions)
+    q_nope, q_rope = _mla_queries(params, x, cfg, accel, positions)
+    bidx = jnp.arange(b)
+    c_kv = cache.c_kv.at[bidx, cache_pos, :].set(c_new[:, 0].astype(cache.c_kv.dtype))
+    k_rope = cache.k_rope.at[bidx, cache_pos, :].set(kr_new[:, 0].astype(cache.k_rope.dtype))
+    s = c_kv.shape[1]
+    # absorb W_uk into the query: q_abs [B, H, lora]
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    q_abs = jnp.einsum("bhd,lhd->bhl", q_nope[:, :, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    logits = (jnp.einsum("bhl,bsl->bhs", q_abs, c_kv.astype(jnp.float32))
+              + jnp.einsum("bhd,bsd->bhs", q_rope[:, :, 0].astype(jnp.float32),
+                           k_rope.astype(jnp.float32))) * scale
+    valid = jnp.arange(s)[None, :] <= cache_pos[:, None]
+    logits = jnp.where(valid[:, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    # attend the latent, then decompress the pooled latent per head:
+    # out_h = W_uv_h^T (sum_s p_s c_s)
+    pooled = jnp.einsum("bhs,bsl->bhl", p, c_kv.astype(jnp.float32))
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bhl,lhd->bhd", pooled, w_uv.astype(jnp.float32))
+    out = out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
+    return (xaif.call("gemm", accel, out, params["wo"]),
+            MLACache(c_kv, k_rope))

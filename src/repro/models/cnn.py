@@ -1,0 +1,229 @@
+"""The paper's TinyAI benchmark models (§V): a CNN and a transformer for
+seizure detection on bio-signal windows, each with ONE entropy-thresholded
+early exit after its first major stage (first conv block / first encoder
+layer) — exactly the paper's configuration.
+
+These are ~100k-param models that we TRAIN FOR REAL (benchmarks/
+early_exit_sweep.py) on synthetic, highly-unbalanced bio-signal data, to
+reproduce the paper's exit-rate / F1 trade-off and feed measured exit rates
+into the Fig. 3 energy model. Binary classification, windowed input
+[B, T, C] (T time samples, C electrode channels).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AccelConfig, EarlyExitConfig
+from repro.core import xaif
+from repro.core.energy import StageCost
+from repro.models.layers import dense_init
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SeizureCNNConfig:
+    name: str = "paper_seizure_cnn"
+    in_channels: int = 18            # EEG montage channels
+    window: int = 1024               # samples per window (4 s @ 256 Hz)
+    channels: Tuple[int, ...] = (32, 64, 64, 128)
+    kernel: int = 7
+    pool: int = 4
+    num_classes: int = 2
+    early_exit: EarlyExitConfig = EarlyExitConfig(
+        exit_layers=(1,), loss_weight=0.01, entropy_threshold=0.35,
+        share_unembed=False)
+
+
+@dataclass(frozen=True)
+class SeizureTransformerConfig:
+    name: str = "paper_seizure_transformer"
+    in_channels: int = 18
+    window: int = 1024
+    patch: int = 64                  # samples per token
+    d_model: int = 64
+    num_heads: int = 4
+    d_ff: int = 128
+    num_layers: int = 4
+    num_classes: int = 2
+    early_exit: EarlyExitConfig = EarlyExitConfig(
+        exit_layers=(1,), loss_weight=0.1, entropy_threshold=0.45,
+        share_unembed=False)
+
+
+# ---------------------------------------------------------------------------
+# CNN
+# ---------------------------------------------------------------------------
+
+
+def _init_conv(key, k, cin, cout):
+    w = jax.random.normal(key, (k, cin, cout), jnp.float32) * ((k * cin) ** -0.5)
+    return {"w": w, "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def _conv1d(p, x):
+    """Same-padded conv. x [B, T, Cin] -> [B, T, Cout]."""
+    return jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1,), padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC")) + p["b"]
+
+
+def init_cnn(key, cfg: SeizureCNNConfig) -> Dict:
+    ks = jax.random.split(key, len(cfg.channels) + 2)
+    blocks = []
+    cin = cfg.in_channels
+    for i, cout in enumerate(cfg.channels):
+        blocks.append(_init_conv(ks[i], cfg.kernel, cin, cout))
+        cin = cout
+    exit_c = cfg.channels[cfg.early_exit.exit_layers[0] - 1]
+    return {
+        "blocks": blocks,
+        "head": {"w": dense_init(ks[-2], cin, cfg.num_classes, jnp.float32),
+                 "b": jnp.zeros((cfg.num_classes,), jnp.float32)},
+        "exit_head": {"w": dense_init(ks[-1], exit_c, cfg.num_classes, jnp.float32),
+                      "b": jnp.zeros((cfg.num_classes,), jnp.float32)},
+    }
+
+
+def forward_cnn(params, x, cfg: SeizureCNNConfig, accel: AccelConfig
+                ) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
+    """x [B, T, C] -> (final_logits [B, 2], (exit_logits [B, 2],))."""
+    exit_after = cfg.early_exit.exit_layers[0]
+    exit_logits = None
+    for i, p in enumerate(params["blocks"]):
+        x = jax.nn.relu(_conv1d(p, x))
+        # max-pool
+        bt = x.shape[1] // cfg.pool * cfg.pool
+        x = jnp.max(x[:, :bt].reshape(x.shape[0], -1, cfg.pool, x.shape[-1]),
+                    axis=2)
+        if i + 1 == exit_after:
+            g = jnp.mean(x, axis=1)                       # GAP
+            exit_logits = xaif.call("gemm", accel, g, params["exit_head"]["w"],
+                                    bias=params["exit_head"]["b"])
+    g = jnp.mean(x, axis=1)
+    logits = xaif.call("gemm", accel, g, params["head"]["w"],
+                       bias=params["head"]["b"])
+    return logits, (exit_logits,)
+
+
+def cnn_stage_costs(cfg: SeizureCNNConfig) -> Tuple[List[StageCost], int]:
+    """FLOP/byte cost per stage for the Fig. 3 energy model.
+    Returns (stages, exit_stage_index)."""
+    stages = []
+    t = cfg.window
+    cin = cfg.in_channels
+    exit_after = cfg.early_exit.exit_layers[0]
+    exit_stage = -1
+    for i, cout in enumerate(cfg.channels):
+        macs = t * cfg.kernel * cin * cout
+        byts = 4 * t * (cin + cout)
+        stages.append(StageCost(f"conv{i}", macs, byts, offloadable=True))
+        t //= cfg.pool
+        cin = cout
+        if i + 1 == exit_after:
+            stages.append(StageCost("exit_head", cin * cfg.num_classes,
+                                    4 * cin, offloadable=False))
+            exit_stage = len(stages) - 1
+    stages.append(StageCost("head", cin * cfg.num_classes, 4 * cin,
+                            offloadable=False))
+    return stages, exit_stage
+
+
+# ---------------------------------------------------------------------------
+# Encoder transformer (paper's other benchmark model)
+# ---------------------------------------------------------------------------
+
+
+def init_transformer(key, cfg: SeizureTransformerConfig) -> Dict:
+    ks = jax.random.split(key, cfg.num_layers + 4)
+    d = cfg.d_model
+    layers = []
+    for i in range(cfg.num_layers):
+        lk = jax.random.split(ks[i], 6)
+        layers.append({
+            "ln1": jnp.ones((d,), jnp.float32),
+            "wq": dense_init(lk[0], d, d, jnp.float32),
+            "wk": dense_init(lk[1], d, d, jnp.float32),
+            "wv": dense_init(lk[2], d, d, jnp.float32),
+            "wo": dense_init(lk[3], d, d, jnp.float32),
+            "ln2": jnp.ones((d,), jnp.float32),
+            "w1": dense_init(lk[4], d, cfg.d_ff, jnp.float32),
+            "w2": dense_init(lk[5], cfg.d_ff, d, jnp.float32),
+        })
+    n_tok = cfg.window // cfg.patch
+    return {
+        "patch_embed": dense_init(ks[-4], cfg.patch * cfg.in_channels, d,
+                                  jnp.float32),
+        "pos": jax.random.normal(ks[-3], (n_tok, d), jnp.float32) * 0.02,
+        "layers": layers,
+        "head": {"w": dense_init(ks[-2], d, cfg.num_classes, jnp.float32),
+                 "b": jnp.zeros((cfg.num_classes,), jnp.float32)},
+        "exit_head": {"w": dense_init(ks[-1], d, cfg.num_classes, jnp.float32),
+                      "b": jnp.zeros((cfg.num_classes,), jnp.float32)},
+    }
+
+
+def _encoder_layer(p, x, cfg, accel):
+    from repro.kernels.rmsnorm.ref import rmsnorm_ref
+    h = rmsnorm_ref(x, p["ln1"])
+    b, t, d = x.shape
+    nh = cfg.num_heads
+    dh = d // nh
+    q = (h @ p["wq"]).reshape(b, t, nh, dh).transpose(0, 2, 1, 3)
+    k = (h @ p["wk"]).reshape(b, t, nh, dh).transpose(0, 2, 1, 3)
+    v = (h @ p["wv"]).reshape(b, t, nh, dh).transpose(0, 2, 1, 3)
+    out = xaif.call("attention", accel, q, k, v, causal=False)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, d)
+    x = x + out @ p["wo"]
+    h2 = rmsnorm_ref(x, p["ln2"])
+    x = x + jax.nn.gelu(h2 @ p["w1"]) @ p["w2"]
+    return x
+
+
+def forward_transformer(params, x, cfg: SeizureTransformerConfig,
+                        accel: AccelConfig):
+    """x [B, T, C] -> (final_logits, (exit_logits,))."""
+    b = x.shape[0]
+    n_tok = cfg.window // cfg.patch
+    tok = x[:, : n_tok * cfg.patch].reshape(b, n_tok, cfg.patch * cfg.in_channels)
+    h = tok @ params["patch_embed"] + params["pos"]
+    exit_after = cfg.early_exit.exit_layers[0]
+    exit_logits = None
+    for i, layer in enumerate(params["layers"]):
+        h = _encoder_layer(layer, h, cfg, accel)
+        if i + 1 == exit_after:
+            g = jnp.mean(h, axis=1)
+            exit_logits = xaif.call("gemm", accel, g, params["exit_head"]["w"],
+                                    bias=params["exit_head"]["b"])
+    g = jnp.mean(h, axis=1)
+    logits = xaif.call("gemm", accel, g, params["head"]["w"],
+                       bias=params["head"]["b"])
+    return logits, (exit_logits,)
+
+
+def transformer_stage_costs(cfg: SeizureTransformerConfig
+                            ) -> Tuple[List[StageCost], int]:
+    n_tok = cfg.window // cfg.patch
+    d = cfg.d_model
+    stages = [StageCost("patch_embed", n_tok * cfg.patch * cfg.in_channels * d,
+                        4 * n_tok * d, offloadable=True)]
+    exit_after = cfg.early_exit.exit_layers[0]
+    exit_stage = -1
+    per_layer_macs = (4 * n_tok * d * d + 2 * n_tok * n_tok * d
+                      + 2 * n_tok * d * cfg.d_ff)
+    for i in range(cfg.num_layers):
+        stages.append(StageCost(f"encoder{i}", per_layer_macs,
+                                4 * 8 * n_tok * d, offloadable=True))
+        if i + 1 == exit_after:
+            stages.append(StageCost("exit_head", d * cfg.num_classes, 4 * d,
+                                    offloadable=False))
+            exit_stage = len(stages) - 1
+    stages.append(StageCost("head", d * cfg.num_classes, 4 * d,
+                            offloadable=False))
+    return stages, exit_stage

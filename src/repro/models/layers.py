@@ -1,0 +1,130 @@
+"""Shared layer primitives: norms, MLP, rotary embeddings, initializers.
+
+Everything is functional: ``init_*`` returns a pytree of arrays, ``apply_*``
+consumes it. Perf-critical ops route through the XAIF registry (gemm,
+rmsnorm) so accelerator backends swap in per-config.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AccelConfig, ArchConfig
+from repro.core import xaif
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * (d_in ** -0.5)).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int) -> Dict[str, jax.Array]:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, accel: AccelConfig, eps: float = 1e-5):
+    return xaif.call("rmsnorm", accel, x, params["scale"], eps=eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (full / partial / GLM-style half-dim "2d")
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for a rotary of `head_dim` dims (must be even)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               rot_dims: Optional[int] = None) -> jax.Array:
+    """x [..., T, D] (or [..., 1, D] at decode), positions [T] or [B, T].
+
+    ``rot_dims`` rotates only the first `rot_dims` dims (partial rotary —
+    ChatGLM's "2d RoPE" applies rotary to half the head dims). None => all.
+    """
+    d = x.shape[-1]
+    rd = d if rot_dims is None else rot_dims
+    assert rd % 2 == 0
+    xr, xp = x[..., :rd], x[..., rd:]
+    inv = rope_frequencies(rd, theta)                       # [rd/2]
+    ang = positions[..., None].astype(jnp.float32) * inv    # [T, rd/2] or [B, T, rd/2]
+    if ang.ndim == 3:
+        # per-sequence positions [B, T]: x is [B, H, T, D] -> [B, 1, T, rd/2]
+        ang = ang[:, None, :, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., 0::2].astype(jnp.float32), xr[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1) if rd < d else out
+
+
+def rope_dims(cfg: ArchConfig) -> Optional[int]:
+    if cfg.rope == "none":
+        return 0
+    if cfg.rope == "partial":
+        rd = int(cfg.head_dim * cfg.rope_partial_pct)
+        return rd - rd % 2
+    return None  # full
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU) — the dense FFN used by every assigned LM
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> Dict[str, jax.Array]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def apply_mlp(params, x, accel: AccelConfig):
+    g = xaif.call("gemm", accel, x, params["w_gate"], activation="silu")
+    u = xaif.call("gemm", accel, x, params["w_up"])
+    return xaif.call("gemm", accel, (g * u).astype(x.dtype), params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Causal 1-D depthwise conv (Mamba / xLSTM front conv)
+# ---------------------------------------------------------------------------
+
+
+def init_conv1d(key, channels: int, kernel: int, dtype) -> Dict[str, jax.Array]:
+    w = jax.random.normal(key, (kernel, channels), jnp.float32) * (kernel ** -0.5)
+    return {"w": w.astype(dtype), "b": jnp.zeros((channels,), dtype)}
+
+
+def apply_conv1d(params, x: jax.Array, state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x [B, T, C]; state [B, K-1, C] carries the
+    left context for decode. Returns (y [B, T, C], new_state)."""
+    w, b = params["w"], params["b"]
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)    # [B, T+K-1, C]
+    y = sum(xp[:, i : i + x.shape[1], :].astype(jnp.float32)
+            * w[i].astype(jnp.float32) for i in range(k))
+    y = (y + b.astype(jnp.float32)).astype(x.dtype)
+    new_state = xp[:, xp.shape[1] - (k - 1):, :]
+    return y, new_state

@@ -1,0 +1,553 @@
+"""CausalLM assembly: embed → (prefix layers + scanned super-blocks, with
+early-exit heads at segment boundaries) → final norm → unembed.
+
+Design notes (all driven by ArchConfig — DESIGN.md C1):
+
+* **Scan over super-blocks.** Layers repeat with period P =
+  len(block_pattern) (dense: 1, Jamba: 8, xLSTM: 8). Weights for each slot
+  are stacked [num_superblocks, ...] and the stack is consumed by lax.scan,
+  so HLO size is O(P), not O(L) — compile time and code size stay flat at
+  88 layers (mistral-large). DeepSeek's first_k_dense layers are explicit.
+* **Early exits split the scan.** An exit head must sit at a super-block
+  boundary; the scanned region is segmented at exit layers and each segment
+  is its own scan. Exit heads are RMSNorm + (shared) unembed (CALM-style).
+* **Three entry points** share one parameter tree: `forward_train`
+  (logits + exit logits + MoE aux), `forward_prefill` (also fills caches),
+  `forward_decode` (one token against carried caches/states).
+* Mixer/FFN state and cache types are per-slot pytrees stacked like the
+  weights, so heterogeneous patterns (attn KV + Mamba SSM states in one
+  model) scan uniformly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AccelConfig, ArchConfig, BlockSpec
+from repro.core import xaif
+from repro.core.early_exit import apply_exit_head, init_exit_head
+from repro.dist.sharding import constrain
+from repro.models import attention as attn
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (apply_mlp, dense_init, embed_init, init_mlp,
+                                 init_rmsnorm, rmsnorm)
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, spec: BlockSpec, cfg: ArchConfig, dtype) -> Dict:
+    k_mix, k_ffn = jax.random.split(key)
+    p: Dict[str, Any] = {"ln1": init_rmsnorm(cfg.d_model)}
+    if spec.mixer == "attn":
+        p["mixer"] = (attn.init_mla(k_mix, cfg, dtype) if cfg.mla is not None
+                      else attn.init_attention(k_mix, cfg, dtype))
+    elif spec.mixer == "mamba":
+        p["mixer"] = mamba_mod.init_mamba(k_mix, cfg, dtype)
+    elif spec.mixer == "mlstm":
+        p["mixer"] = xlstm_mod.init_mlstm(k_mix, cfg, dtype)
+    elif spec.mixer == "slstm":
+        p["mixer"] = xlstm_mod.init_slstm(k_mix, cfg, dtype)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn != "none":
+        p["ln2"] = init_rmsnorm(cfg.d_model)
+        p["ffn"] = (moe_mod.init_moe(k_ffn, cfg, dtype) if spec.ffn == "moe"
+                    else init_mlp(k_ffn, cfg.d_model, cfg.d_ff, dtype))
+    return p
+
+
+def _apply_layer(p, x, spec: BlockSpec, cfg: ArchConfig, accel: AccelConfig,
+                 state=None, mode: str = "train", cache_pos=None):
+    """Returns (x, aux_loss, new_state)."""
+    h = rmsnorm(p["ln1"], x, accel, cfg.norm_eps)
+    new_state = None
+    if spec.mixer == "attn":
+        if cfg.mla is not None:
+            if mode == "decode":
+                out, new_state = attn.apply_mla_decode(p["mixer"], h, cfg,
+                                                       accel, state, cache_pos)
+            else:
+                out, new_state = attn.apply_mla(p["mixer"], h, cfg, accel,
+                                                cache=state)
+        else:
+            if mode == "decode":
+                out, new_state = attn.apply_attention_decode(
+                    p["mixer"], h, cfg, accel, state, cache_pos)
+            elif mode == "prefill":
+                out, new_state = attn.apply_attention_prefill(
+                    p["mixer"], h, cfg, accel, state)
+            else:
+                out = attn.apply_attention(p["mixer"], h, cfg, accel)
+    elif spec.mixer == "mamba":
+        fn = (mamba_mod.apply_mamba_decode if mode == "decode"
+              else mamba_mod.apply_mamba)
+        out, new_state = fn(p["mixer"], h, cfg, accel, state)
+    elif spec.mixer == "mlstm":
+        fn = (xlstm_mod.apply_mlstm_decode if mode == "decode"
+              else xlstm_mod.apply_mlstm)
+        out, new_state = fn(p["mixer"], h, cfg, accel, state)
+    elif spec.mixer == "slstm":
+        fn = (xlstm_mod.apply_slstm_decode if mode == "decode"
+              else xlstm_mod.apply_slstm)
+        out, new_state = fn(p["mixer"], h, cfg, accel, state)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + out
+    aux = jnp.zeros((), jnp.float32)
+    if spec.ffn != "none":
+        h2 = rmsnorm(p["ln2"], x, accel, cfg.norm_eps)
+        if spec.ffn == "moe":
+            groups = 1 if h2.shape[1] == 1 else None
+            out2, aux = moe_mod.apply_moe(p["ffn"], h2, cfg, accel, groups)
+        else:
+            out2 = apply_mlp(p["ffn"], h2, accel)
+        x = x + out2
+    # residual stream: batch over data axes, sequence-parallel over the
+    # model axis when enabled (shards the saved scan carries — the remat
+    # residuals — 16x; GSPMD inserts the Megatron-SP gather/scatter pair)
+    x = constrain(x, "batch", "sp" if x.shape[1] > 1 else None, None)
+    return x, aux, new_state
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+
+def init_lm(key, cfg: ArchConfig) -> Dict:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": init_rmsnorm(cfg.d_model),
+        "unembed": dense_init(keys[1], cfg.d_model, cfg.vocab_size, dtype),
+    }
+    # explicit prefix layers
+    if cfg.first_k_dense:
+        pkeys = jax.random.split(keys[2], cfg.first_k_dense)
+        params["prefix"] = [
+            _init_layer(pkeys[i], cfg.layer_spec(i), cfg, dtype)
+            for i in range(cfg.first_k_dense)
+        ]
+    # scanned slots: stacked over num_superblocks via vmapped init
+    n_sb = cfg.num_superblocks
+    slots = []
+    for j, spec in enumerate(cfg.block_pattern):
+        slot_keys = jax.random.split(jax.random.fold_in(keys[3], j), n_sb)
+        slots.append(jax.vmap(
+            lambda k, spec=spec: _init_layer(k, spec, cfg, dtype))(slot_keys))
+    params["slots"] = tuple(slots)
+    # early-exit heads
+    if cfg.early_exit is not None:
+        ekeys = jax.random.split(keys[4], len(cfg.early_exit.exit_layers))
+        params["exits"] = tuple(
+            init_exit_head(ekeys[i], cfg.d_model, cfg.vocab_size,
+                           cfg.early_exit.share_unembed, dtype)
+            for i in range(len(cfg.early_exit.exit_layers)))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Segment planning: exit layers split the scanned region
+# ---------------------------------------------------------------------------
+
+
+def _segments(cfg: ArchConfig) -> List[Tuple[int, int, Optional[int]]]:
+    """[(sb_start, sb_end, exit_index_or_None), ...] over super-blocks."""
+    n_sb = cfg.num_superblocks
+    exits = []
+    if cfg.early_exit is not None:
+        for i, el in enumerate(cfg.early_exit.exit_layers):
+            sb = (el - cfg.first_k_dense) // cfg.period
+            assert 0 < sb <= n_sb and (el - cfg.first_k_dense) % cfg.period == 0, (
+                f"{cfg.name}: exit layer {el} not on a super-block boundary "
+                f"(first_k_dense={cfg.first_k_dense}, period={cfg.period})")
+            exits.append((sb, i))
+    segs: List[Tuple[int, int, Optional[int]]] = []
+    prev = 0
+    for sb, i in sorted(exits):
+        if sb > prev:
+            segs.append((prev, sb, i))
+            prev = sb
+        else:  # exit exactly at prev boundary (e.g. after prefix)
+            segs.append((prev, prev, i))
+    if prev < n_sb or not segs:
+        segs.append((prev, n_sb, None))
+    return segs
+
+
+def _remat_wrap(fn, remat: str):
+    if remat == "full":
+        return jax.checkpoint(fn)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return fn
+
+
+def _scan_segment(slots, x, sb_start, sb_end, cfg, accel, remat="nothing",
+                  mode="train", states=None, cache_pos=None):
+    """Run super-blocks [sb_start, sb_end). Returns (x, aux, new_states)."""
+    if sb_end == sb_start:
+        return x, jnp.zeros((), jnp.float32), states
+    sliced = jax.tree_util.tree_map(lambda a: a[sb_start:sb_end], slots)
+    xs = sliced
+    has_state = states is not None
+    if has_state:
+        states_sliced = jax.tree_util.tree_map(
+            lambda a: a[sb_start:sb_end], states)
+        xs = (sliced, states_sliced)
+
+    def body(carry, xs_i):
+        x, aux = carry
+        slot_params, slot_states = xs_i if has_state else (xs_i, None)
+        new_states = []
+        for j, spec in enumerate(cfg.block_pattern):
+            st = slot_states[j] if has_state else None
+            x, a, ns = _apply_layer(slot_params[j], x, spec, cfg, accel,
+                                    state=st, mode=mode, cache_pos=cache_pos)
+            aux = aux + a
+            new_states.append(ns)
+        out = tuple(new_states) if has_state else None
+        return (x, aux), out
+
+    body = _remat_wrap(body, remat if mode == "train" else "nothing")
+    (x, aux), new_states = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, aux, new_states
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, inputs, cfg: ArchConfig):
+    """inputs: int tokens [B, T] or (frontend_stub) embeddings [B, T, d]."""
+    if jnp.issubdtype(inputs.dtype, jnp.floating):
+        assert cfg.frontend_stub and inputs.ndim == 3
+        x = inputs.astype(jnp.dtype(cfg.dtype))
+    else:
+        x = jnp.take(params["embed"], inputs, axis=0)
+    return constrain(x, "batch", None, None)
+
+
+def _head(params, x, cfg: ArchConfig, accel: AccelConfig):
+    h = rmsnorm(params["final_norm"], x, accel, cfg.norm_eps)
+    logits = xaif.call("gemm", accel, h, params["unembed"])
+    return constrain(logits, "batch", None, "tp")
+
+
+def _exit_logits(params, x, i, cfg, accel):
+    return constrain(
+        apply_exit_head(params["exits"][i], x, params["unembed"], accel,
+                        cfg.norm_eps),
+        "batch", None, "tp")
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def forward_train(params, inputs, cfg: ArchConfig, accel: AccelConfig,
+                  remat: str = "nothing"):
+    """-> (final_logits, exit_logits tuple, aux dict)."""
+    x = _embed(params, inputs, cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    exit_lg: List[jax.Array] = []
+    exit_points = {}
+    if cfg.early_exit is not None:
+        exit_points = {el: i for i, el in enumerate(cfg.early_exit.exit_layers)}
+    for i in range(cfg.first_k_dense):
+        x, a, _ = _apply_layer(params["prefix"][i], x, cfg.layer_spec(i), cfg,
+                               accel, mode="train")
+        aux_total = aux_total + a
+        if (i + 1) in exit_points:
+            exit_lg.append(_exit_logits(params, x, exit_points[i + 1], cfg, accel))
+    for sb_start, sb_end, exit_i in _segments(cfg):
+        x, a, _ = _scan_segment(params["slots"], x, sb_start, sb_end, cfg,
+                                accel, remat, mode="train")
+        aux_total = aux_total + a
+        if exit_i is not None:
+            exit_lg.append(_exit_logits(params, x, exit_i, cfg, accel))
+    logits = _head(params, x, cfg, accel)
+    return logits, tuple(exit_lg), {"aux_loss": aux_total}
+
+
+def forward_train_hidden(params, inputs, cfg: ArchConfig, accel: AccelConfig,
+                         remat: str = "nothing"):
+    """Like forward_train but returns the PRE-HEAD hidden states instead of
+    logits: (x [B,T,d], exit_hiddens tuple, aux). Used by the chunked
+    head+loss path (train_step.chunked_head_loss) so the [B,T,V] logits are
+    never materialized."""
+    x = _embed(params, inputs, cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    exit_hidden: List[jax.Array] = []
+    exit_points = {}
+    if cfg.early_exit is not None:
+        exit_points = {el: i for i, el in enumerate(cfg.early_exit.exit_layers)}
+    for i in range(cfg.first_k_dense):
+        x, a, _ = _apply_layer(params["prefix"][i], x, cfg.layer_spec(i), cfg,
+                               accel, mode="train")
+        aux_total = aux_total + a
+        if (i + 1) in exit_points:
+            exit_hidden.append(x)
+    for sb_start, sb_end, exit_i in _segments(cfg):
+        x, a, _ = _scan_segment(params["slots"], x, sb_start, sb_end, cfg,
+                                accel, remat, mode="train")
+        aux_total = aux_total + a
+        if exit_i is not None:
+            exit_hidden.append(x)
+    return x, (tuple(exit_hidden) if exit_hidden else None), \
+        {"aux_loss": aux_total}
+
+
+# ----- caches ----------------------------------------------------------------
+
+
+class LMCache(NamedTuple):
+    prefix: Tuple            # per prefix layer state (or None)
+    slots: Tuple             # per slot: stacked [n_sb, ...] states
+    pos: jax.Array           # [B] int32 current lengths
+
+
+def _init_layer_state(spec: BlockSpec, cfg: ArchConfig, batch: int,
+                      max_len: int, dtype):
+    if spec.mixer == "attn":
+        if cfg.mla is not None:
+            return attn.init_mla_cache(cfg, batch, max_len, dtype)
+        return attn.init_kv_cache(cfg, batch, max_len, dtype)
+    if spec.mixer == "mamba":
+        return mamba_mod.init_mamba_state(cfg, batch, dtype)
+    if spec.mixer == "mlstm":
+        return xlstm_mod.init_mlstm_state(cfg, batch, dtype)
+    if spec.mixer == "slstm":
+        return xlstm_mod.init_slstm_state(cfg, batch, dtype)
+    raise ValueError(spec.mixer)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> LMCache:
+    dtype = jnp.dtype(cfg.dtype)
+    prefix = tuple(
+        _init_layer_state(cfg.layer_spec(i), cfg, batch, max_len, dtype)
+        for i in range(cfg.first_k_dense))
+    n_sb = cfg.num_superblocks
+    slots = []
+    for spec in cfg.block_pattern:
+        one = _init_layer_state(spec, cfg, batch, max_len, dtype)
+        slots.append(jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (n_sb, *a.shape)).copy(), one))
+    return LMCache(prefix=prefix, slots=tuple(slots),
+                   pos=jnp.zeros((batch,), jnp.int32))
+
+
+def forward_prefill(params, inputs, cfg: ArchConfig, accel: AccelConfig,
+                    cache: LMCache):
+    """Full-sequence prefill filling caches; returns (last_logits, cache)."""
+    x = _embed(params, inputs, cfg)
+    t = x.shape[1]
+    new_prefix = []
+    for i in range(cfg.first_k_dense):
+        x, _, ns = _apply_layer(params["prefix"][i], x, cfg.layer_spec(i), cfg,
+                                accel, state=cache.prefix[i], mode="prefill")
+        new_prefix.append(ns)
+    x, _, new_slots = _scan_segment(params["slots"], x, 0,
+                                    cfg.num_superblocks, cfg, accel,
+                                    mode="prefill", states=cache.slots)
+    last = x[:, -1:, :]
+    logits = _head(params, last, cfg, accel)
+    pos = jnp.full_like(cache.pos, t)
+    return logits[:, 0], LMCache(tuple(new_prefix), tuple(new_slots), pos)
+
+
+def forward_decode(params, tokens, cfg: ArchConfig, accel: AccelConfig,
+                   cache: LMCache, with_exits: bool = True):
+    """One decode step. tokens [B, 1] (or [B, 1, d] embeddings).
+
+    Returns (final_logits [B, V], exit_logits tuple, new_cache).
+    """
+    x = _embed(params, tokens, cfg)
+    cache_pos = cache.pos
+    exit_lg: List[jax.Array] = []
+    exit_points = {}
+    if with_exits and cfg.early_exit is not None:
+        exit_points = {el: i for i, el in enumerate(cfg.early_exit.exit_layers)}
+    new_prefix = []
+    for i in range(cfg.first_k_dense):
+        x, _, ns = _apply_layer(params["prefix"][i], x, cfg.layer_spec(i), cfg,
+                                accel, state=cache.prefix[i], mode="decode",
+                                cache_pos=cache_pos)
+        new_prefix.append(ns)
+        if (i + 1) in exit_points:
+            exit_lg.append(_exit_logits(params, x, exit_points[i + 1], cfg,
+                                        accel)[:, 0])
+    new_slots = cache.slots
+    for sb_start, sb_end, exit_i in _segments(cfg):
+        x, _, seg_states = _scan_segment(
+            params["slots"], x, sb_start, sb_end, cfg, accel, mode="decode",
+            states=cache.slots, cache_pos=cache_pos)
+        if sb_end > sb_start:
+            new_slots = jax.tree_util.tree_map(
+                lambda full, seg: jax.lax.dynamic_update_slice_in_dim(
+                    full, seg.astype(full.dtype), sb_start, axis=0),
+                new_slots, seg_states)
+        if exit_i is not None and (with_exits and cfg.early_exit is not None):
+            exit_lg.append(_exit_logits(params, x, exit_i, cfg, accel)[:, 0])
+    logits = _head(params, x, cfg, accel)[:, 0]
+    new_cache = LMCache(tuple(new_prefix), new_slots, cache.pos + 1)
+    return logits, tuple(exit_lg), new_cache
+
+
+def _kv_propagate_layer(p, x_exit, cfg: ArchConfig, accel, state, cache_pos):
+    """CALM state propagation: fill a skipped attention layer's KV cache from
+    the exit hidden state (wk/wv or latent projections only — no scores, no
+    values-weighted sum, no FFN). This is the decode-side power gating
+    (DESIGN.md C3): ~2 of ~8 GEMMs per skipped layer."""
+    b = x_exit.shape[0]
+    h = rmsnorm(p["ln1"], x_exit, accel, cfg.norm_eps)
+    bidx = jnp.arange(b)
+    if cfg.mla is not None:
+        c_new, kr_new = attn._mla_latent(p["mixer"], h, cfg, accel,
+                                         cache_pos[:, None])
+        return attn.MLACache(
+            state.c_kv.at[bidx, cache_pos, :].set(
+                c_new[:, 0].astype(state.c_kv.dtype)),
+            state.k_rope.at[bidx, cache_pos, :].set(
+                kr_new[:, 0].astype(state.k_rope.dtype)))
+    hkv, dh = cfg.num_kv_heads, cfg.head_dim
+    mp = p["mixer"]
+    k = xaif.call("gemm", accel, h, mp["wk"], bias=mp.get("bk"))
+    v = xaif.call("gemm", accel, h, mp["wv"], bias=mp.get("bv"))
+    k = k.reshape(b, 1, hkv, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b, 1, hkv, dh).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        k = rmsnorm(mp["k_norm"], k, accel, cfg.norm_eps)
+    from repro.models.layers import apply_rope, rope_dims
+    rd = rope_dims(cfg)
+    if rd != 0:
+        k = apply_rope(k, cache_pos[:, None], cfg.rope_theta, rd)
+    return attn.KVCache(
+        state.k.at[bidx, :, cache_pos, :].set(k[:, :, 0, :].astype(state.k.dtype)),
+        state.v.at[bidx, :, cache_pos, :].set(v[:, :, 0, :].astype(state.v.dtype)))
+
+
+def forward_decode_gated(params, tokens, cfg: ArchConfig, accel: AccelConfig,
+                         cache: LMCache):
+    """Early-exit decode with REAL compute gating (attention-only archs).
+
+    Runs layers up to the (single) exit head, takes the entropy decision,
+    and — when EVERY sequence in the batch is confident — skips the
+    remaining layers entirely via lax.cond, filling their KV caches by CALM
+    state propagation so later steps stay exact. Mixed batches fall through
+    to the full path (per-sequence gating needs compaction; see DESIGN.md).
+
+    Returns (logits [B, V], exit_mask [B], new_cache).
+    """
+    assert cfg.early_exit is not None and len(cfg.early_exit.exit_layers) == 1
+    assert all(b.mixer == "attn" for b in cfg.block_pattern), \
+        "gated decode requires an attention-only arch (SSM states cannot be propagated)"
+    from repro.core.early_exit import should_exit
+    x = _embed(params, tokens, cfg)
+    cache_pos = cache.pos
+    new_prefix = []
+    for i in range(cfg.first_k_dense):
+        x, _, ns = _apply_layer(params["prefix"][i], x, cfg.layer_spec(i), cfg,
+                                accel, state=cache.prefix[i], mode="decode",
+                                cache_pos=cache_pos)
+        new_prefix.append(ns)
+    exit_sb = (cfg.early_exit.exit_layers[0] - cfg.first_k_dense) // cfg.period
+    n_sb = cfg.num_superblocks
+    # segment 1: up to the exit head
+    x, _, pre_states = _scan_segment(params["slots"], x, 0, exit_sb, cfg,
+                                     accel, mode="decode", states=cache.slots,
+                                     cache_pos=cache_pos)
+    exit_lg = _exit_logits(params, x, 0, cfg, accel)[:, 0]
+    exit_mask, _ = should_exit(exit_lg, cfg.early_exit.entropy_threshold, accel)
+    rest = jax.tree_util.tree_map(lambda a: a[exit_sb:n_sb], cache.slots)
+
+    def cont(ops):
+        x_in, rest_states = ops
+        x2, _, new_rest = _scan_segment_pre(rest_states, params, x_in, exit_sb,
+                                            n_sb, cfg, accel, cache_pos)
+        lg = _head(params, x2, cfg, accel)[:, 0]
+        lg = jnp.where(exit_mask[:, None], exit_lg, lg)
+        return lg, new_rest
+
+    def skip(ops):
+        x_in, rest_states = ops
+
+        def body(carry, xs_i):
+            slot_params, slot_states = xs_i
+            new_states = tuple(
+                _kv_propagate_layer(slot_params[j], carry, cfg, accel,
+                                    slot_states[j], cache_pos)
+                for j in range(cfg.period))
+            return carry, new_states
+
+        sliced = jax.tree_util.tree_map(
+            lambda a: a[exit_sb:n_sb], params["slots"])
+        _, new_rest = jax.lax.scan(body, x_in, (sliced, rest_states))
+        return exit_lg, new_rest
+
+    logits, new_rest = jax.lax.cond(jnp.all(exit_mask), skip, cont, (x, rest))
+    new_slots = jax.tree_util.tree_map(
+        lambda pre, post: jnp.concatenate([pre, post], axis=0),
+        pre_states, new_rest)
+    return logits, exit_mask, LMCache(tuple(new_prefix), new_slots,
+                                      cache.pos + 1)
+
+
+def _scan_segment_pre(states_sliced, params, x, sb_start, sb_end, cfg, accel,
+                      cache_pos):
+    """Like _scan_segment(mode=decode) but takes pre-sliced states."""
+    sliced = jax.tree_util.tree_map(
+        lambda a: a[sb_start:sb_end], params["slots"])
+
+    def body(carry, xs_i):
+        x, aux = carry
+        slot_params, slot_states = xs_i
+        new_states = []
+        for j, spec in enumerate(cfg.block_pattern):
+            x, a, ns = _apply_layer(slot_params[j], x, spec, cfg, accel,
+                                    state=slot_states[j], mode="decode",
+                                    cache_pos=cache_pos)
+            aux = aux + a
+            new_states.append(ns)
+        return (x, aux), tuple(new_states)
+
+    (x, aux), new_states = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (sliced, states_sliced))
+    return x, aux, new_states
+
+
+# ---------------------------------------------------------------------------
+# Parameter counting (roofline MODEL_FLOPS + static characterization)
+# ---------------------------------------------------------------------------
+
+
+def count_params(cfg: ArchConfig, active_only: bool = False) -> int:
+    import math
+    shapes = jax.eval_shape(lambda k: init_lm(k, cfg),
+                            jax.random.PRNGKey(0))
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = math.prod(leaf.shape)
+        if active_only and cfg.moe is not None:
+            name = None
+            for entry in reversed(path):
+                key = getattr(entry, "key", getattr(entry, "name", None))
+                if isinstance(key, str):
+                    name = key
+                    break
+            in_expert = name in ("w_gate_e", "w_up_e", "w_down_e")
+            if in_expert:
+                n = int(n * cfg.moe.top_k / cfg.moe.num_experts)
+        total += n
+    return total

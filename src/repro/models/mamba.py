@@ -1,0 +1,112 @@
+"""Mamba-1 selective-SSM mixer (Jamba's sequence mixer).
+
+Train/prefill run the chunked selective scan through the XAIF "ssm_scan" op
+(Pallas kernel or lax.scan reference); decode is the O(1)-per-token
+recurrence on a carried (conv window, SSM state) pair — the reason the
+long_500k cell is runnable for the hybrid arch at all.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AccelConfig, ArchConfig
+from repro.core import xaif
+from repro.models.layers import apply_conv1d, dense_init, init_conv1d
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array   # [B, K-1, Din]
+    ssm: jax.Array    # [B, Din, N] fp32
+
+
+def _dims(cfg: ArchConfig) -> Tuple[int, int, int]:
+    m = cfg.mamba
+    d_inner = m.expand * cfg.d_model
+    dt_rank = m.dt_rank or max(1, -(-cfg.d_model // 16))
+    return d_inner, dt_rank, m.d_state
+
+
+def init_mamba(key, cfg: ArchConfig, dtype) -> Dict:
+    m = cfg.mamba
+    d = cfg.d_model
+    d_inner, dt_rank, n = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A; dt bias so softplus(dt) spans [1e-3, 1e-1]
+    a_init = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (d_inner, 1))
+    dt_bias = jnp.log(jnp.exp(
+        jnp.exp(jax.random.uniform(ks[4], (d_inner,), jnp.float32)
+                * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))) - 1.0 + 1e-9)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_inner, dtype),
+        "conv": init_conv1d(ks[1], d_inner, m.d_conv, dtype),
+        "x_proj": dense_init(ks[2], d_inner, dt_rank + 2 * n, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, d_inner, dtype),
+        "dt_bias": dt_bias,
+        "a_log": jnp.log(a_init),
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[5], d_inner, d, dtype),
+    }
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int, dtype) -> MambaState:
+    d_inner, _, n = _dims(cfg)
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.mamba.d_conv - 1, d_inner), dtype),
+        ssm=jnp.zeros((batch, d_inner, n), jnp.float32),
+    )
+
+
+def _split_xdbc(params, xc, cfg):
+    """xc [B, T, Din] (post-conv) -> (dt, b, c)."""
+    _, dt_rank, n = _dims(cfg)
+    xdbc = jnp.einsum("btd,de->bte", xc, params["x_proj"])
+    dt_low, b, c = jnp.split(xdbc, [dt_rank, dt_rank + n], axis=-1)
+    dt = jnp.einsum("btr,rd->btd", dt_low, params["dt_proj"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    return dt, b, c
+
+
+def apply_mamba(params, x: jax.Array, cfg: ArchConfig, accel: AccelConfig,
+                state: Optional[MambaState] = None
+                ) -> Tuple[jax.Array, Optional[MambaState]]:
+    """Full-sequence path. x [B, T, d] -> (y, final state if requested)."""
+    xz = xaif.call("gemm", accel, x, params["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)                     # [B, T, Din] each
+    conv_state = state.conv if state is not None else None
+    xc, new_conv = apply_conv1d(params["conv"], xi, conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    dt, b, c = _split_xdbc(params, xc, cfg)
+    a = -jnp.exp(params["a_log"])
+    h0 = state.ssm if state is not None else None
+    y, h_final = xaif.call("ssm_scan", accel, xc, dt.astype(x.dtype), a, b, c,
+                           params["d_skip"], h0)
+    y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    out = xaif.call("gemm", accel, y.astype(x.dtype), params["out_proj"])
+    new_state = MambaState(new_conv, h_final) if state is not None else None
+    return out, new_state
+
+
+def apply_mamba_decode(params, x: jax.Array, cfg: ArchConfig,
+                       accel: AccelConfig, state: MambaState
+                       ) -> Tuple[jax.Array, MambaState]:
+    """Single-token recurrence. x [B, 1, d]."""
+    xz = xaif.call("gemm", accel, x, params["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, new_conv = apply_conv1d(params["conv"], xi, state.conv)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    dt, b, c = _split_xdbc(params, xc, cfg)               # [B, 1, ...]
+    a = -jnp.exp(params["a_log"])                         # [Din, N]
+    da = jnp.exp(dt[:, 0, :, None] * a)                   # [B, Din, N]
+    db = (dt[:, 0] * xc.astype(jnp.float32)[:, 0])[..., None] \
+        * b.astype(jnp.float32)[:, 0, None, :]
+    h = da * state.ssm + db
+    y = jnp.sum(h * c.astype(jnp.float32)[:, 0, None, :], axis=-1)  # [B, Din]
+    y = y + params["d_skip"] * xc.astype(jnp.float32)[:, 0]
+    y = y * jax.nn.silu(z.astype(jnp.float32)[:, 0])
+    out = xaif.call("gemm", accel, y[:, None].astype(x.dtype),
+                    params["out_proj"])
+    return out, MambaState(new_conv, h)

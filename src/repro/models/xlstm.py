@@ -1,0 +1,310 @@
+"""xLSTM mixers: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential), per Beck et al. 2024 (arXiv:2405.04517).
+
+mLSTM is a linear-attention-class cell with exponential gating:
+
+    C_t = f_t C_{t-1} + i_t v_t k_t^T      (matrix memory, per head)
+    n_t = f_t n_{t-1} + i_t k_t            (normalizer)
+    h_t = (C_t q_t) / max(|n_t . q_t|, exp(-m_t))
+
+with log-domain stabilizer m_t. Training/prefill use the CHUNKWISE form:
+intra-chunk pairwise scores (quadratic in the chunk length only) plus an
+inter-chunk recurrent state — O(T * L) not O(T^2), which is what makes the
+long_500k cell viable for this family. Decode is the O(1) recurrence.
+
+sLSTM keeps per-channel scalar memories with hidden-state recurrence in the
+gates (R h_{t-1}), which forces a sequential lax.scan — the xLSTM paper's
+trade-off for its state-tracking abilities. We follow the paper's 7:1
+mLSTM:sLSTM block ratio (set in the arch config's block_pattern).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AccelConfig, ArchConfig
+from repro.core import xaif
+from repro.models.layers import apply_conv1d, dense_init, init_conv1d
+
+_NEG = -1e30
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array      # [B, H, dh, dh] fp32
+    n: jax.Array      # [B, H, dh] fp32
+    m: jax.Array      # [B, H] fp32 (log-domain stabilizer)
+    conv: jax.Array   # [B, K-1, d_in]
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array      # [B, d] fp32
+    n: jax.Array      # [B, d] fp32
+    h: jax.Array      # [B, d] fp32
+    m: jax.Array      # [B, d] fp32
+
+
+def _mlstm_dims(cfg: ArchConfig) -> Tuple[int, int]:
+    d_in = int(cfg.xlstm.mlstm_proj_factor * cfg.d_model)
+    return d_in, d_in // cfg.num_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def _blockdiag_init(key, h, d_in, d_out, dtype):
+    """Per-head block-diagonal projection [H, dh_in, dh_out] — the xLSTM
+    paper's parameterization (keeps the 350M budget: dense d_in x d_in
+    q/k/v would add ~10M params/block)."""
+    return (jax.random.normal(key, (h, d_in, d_out), jnp.float32)
+            * (d_in ** -0.5)).astype(dtype)
+
+
+def init_mlstm(key, cfg: ArchConfig, dtype) -> Dict:
+    d = cfg.d_model
+    d_in, dh = _mlstm_dims(cfg)
+    h = cfg.num_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "up_proj": dense_init(ks[0], d, 2 * d_in, dtype),     # x and z-gate
+        "conv": init_conv1d(ks[1], d_in, cfg.xlstm.conv_kernel, dtype),
+        "wq": _blockdiag_init(ks[2], h, dh, dh, dtype),
+        "wk": _blockdiag_init(ks[3], h, dh, dh, dtype),
+        "wv": _blockdiag_init(ks[4], h, dh, dh, dtype),
+        # per-head scalar gate projections
+        "w_if": dense_init(ks[5], d_in, 2 * h, jnp.float32),
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "b_f": jnp.full((h,), 3.0, jnp.float32),   # bias toward remembering
+        "norm_scale": jnp.ones((d_in,), jnp.float32),
+        "down_proj": dense_init(ks[6], d_in, d, dtype),
+    }
+
+
+def init_mlstm_state(cfg: ArchConfig, batch: int, dtype) -> MLSTMState:
+    d_in, dh = _mlstm_dims(cfg)
+    h = cfg.num_heads
+    return MLSTMState(
+        c=jnp.zeros((batch, h, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, h, dh), jnp.float32),
+        m=jnp.zeros((batch, h), jnp.float32),
+        conv=jnp.zeros((batch, cfg.xlstm.conv_kernel - 1, d_in), dtype),
+    )
+
+
+def _mlstm_qkv_gates(params, x, cfg, state_conv):
+    """Shared projections. x [B, T, d] -> q,k,v [B,H,T,dh], logi/logf [B,H,T]."""
+    accel_free = None  # projections below are plain jnp (fused by XLA)
+    b, t, _ = x.shape
+    h = cfg.num_heads
+    d_in, dh = _mlstm_dims(cfg)
+    xz = jnp.einsum("btd,de->bte", x, params["up_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)                       # [B, T, d_in]
+    xc, new_conv = apply_conv1d(params["conv"], xi, state_conv)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    xch = xc.reshape(b, t, h, dh)                           # per-head split
+    xih = xi.reshape(b, t, h, dh)
+    q = jnp.einsum("bthd,hde->bhte", xch, params["wq"])
+    k = jnp.einsum("bthd,hde->bhte", xch, params["wk"]) * (dh ** -0.5)
+    v = jnp.einsum("bthd,hde->bhte", xih, params["wv"])
+    gates = jnp.einsum("btd,dg->btg", xc.astype(jnp.float32),
+                       params["w_if"]).reshape(b, t, h, 2).transpose(0, 2, 1, 3)
+    logi = gates[..., 0] + params["b_i"][None, :, None]      # [B, H, T]
+    logf = jax.nn.log_sigmoid(gates[..., 1] + params["b_f"][None, :, None])
+    return q, k, v, logi, logf, z, new_conv
+
+
+def _mlstm_headnorm(params, h_out, eps):
+    """Per-head RMS normalization of the cell output. h_out [B,H,T,dh]."""
+    ms = jnp.mean(h_out * h_out, axis=-1, keepdims=True)
+    return h_out * jax.lax.rsqrt(ms + eps)
+
+
+def apply_mlstm(params, x: jax.Array, cfg: ArchConfig, accel: AccelConfig,
+                state: Optional[MLSTMState] = None
+                ) -> Tuple[jax.Array, Optional[MLSTMState]]:
+    """Chunkwise-parallel path. x [B, T, d]."""
+    b, t, d = x.shape
+    hh = cfg.num_heads
+    d_in, dh = _mlstm_dims(cfg)
+    lchunk = min(cfg.xlstm.chunk_size, t)
+    while t % lchunk:
+        lchunk //= 2
+    nchunk = t // lchunk
+
+    conv0 = state.conv if state is not None else None
+    q, k, v, logi, logf, z, new_conv = _mlstm_qkv_gates(params, x, cfg, conv0)
+
+    # reshape into chunks: [B, H, NC, L, ...]
+    def chunk(a):
+        return a.reshape(b, hh, nchunk, lchunk, *a.shape[3:])
+
+    qc, kc, vc = chunk(q.astype(jnp.float32)), chunk(k.astype(jnp.float32)), \
+        chunk(v.astype(jnp.float32))
+    lic, lfc = chunk(logi), chunk(logf)
+
+    if state is not None:
+        c0, n0, m0 = state.c, state.n, state.m
+    else:
+        c0 = jnp.zeros((b, hh, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, hh, dh), jnp.float32)
+        m0 = jnp.zeros((b, hh), jnp.float32)
+
+    def scan_chunk(carry, xs):
+        c_prev, n_prev, m_prev = carry
+        qx, kx, vx, li, lf = xs        # [B,H,L,dh] x3, [B,H,L] x2
+        bcum = jnp.cumsum(lf, axis=-1)                       # inclusive decay
+        # intra-chunk pairwise log-weights D[t, s] = b_t - b_s + i_s (s <= t)
+        dmat = bcum[..., :, None] - bcum[..., None, :] + li[..., None, :]
+        tri = jnp.tril(jnp.ones((lchunk, lchunk), bool))
+        dmat = jnp.where(tri, dmat, _NEG)
+        # per-step stabilizer: max(inter decay + m_prev, intra row max)
+        m_inter = bcum + m_prev[..., None]                   # [B,H,L]
+        m_t = jnp.maximum(m_inter, jnp.max(dmat, axis=-1))
+        w_intra = jnp.exp(dmat - m_t[..., None])             # [B,H,L,L]
+        w_inter = jnp.exp(m_inter - m_t)                     # [B,H,L]
+        scores = jnp.einsum("bhtd,bhsd->bhts", qx, kx) * w_intra
+        h_num = (jnp.einsum("bhts,bhsd->bhtd", scores, vx)
+                 + w_inter[..., None] * jnp.einsum("bhtd,bhde->bhte", qx, c_prev))
+        n_dot = (jnp.sum(scores, axis=-1)
+                 + w_inter * jnp.einsum("bhtd,bhd->bht", qx, n_prev))
+        denom = jnp.maximum(jnp.abs(n_dot), jnp.exp(-m_t))
+        h_out = h_num / denom[..., None]                     # [B,H,L,dh]
+        # chunk-end state update (t = L-1)
+        m_state = m_t[..., -1]
+        w_state = jnp.exp(dmat[..., -1, :] - m_state[..., None])   # [B,H,L]
+        decay0 = jnp.exp(m_inter[..., -1] - m_state)               # [B,H]
+        c_new = (decay0[..., None, None] * c_prev
+                 + jnp.einsum("bhs,bhsd,bhse->bhde", w_state, kx, vx))
+        n_new = (decay0[..., None] * n_prev
+                 + jnp.einsum("bhs,bhsd->bhd", w_state, kx))
+        return (c_new, n_new, m_state), h_out
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (qc, kc, vc, lic, lfc))
+    (c_f, n_f, m_f), hs = jax.lax.scan(scan_chunk, (c0, n0, m0), xs)
+    h_out = jnp.moveaxis(hs, 0, 2).reshape(b, hh, t, dh)     # [B,H,T,dh]
+    h_out = _mlstm_headnorm(params, h_out, cfg.norm_eps)
+    h_out = h_out.transpose(0, 2, 1, 3).reshape(b, t, d_in)
+    h_out = h_out * params["norm_scale"]
+    out = (h_out * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bte,ed->btd", out, params["down_proj"])
+    new_state = (MLSTMState(c_f, n_f, m_f, new_conv)
+                 if state is not None else None)
+    return out, new_state
+
+
+def apply_mlstm_decode(params, x: jax.Array, cfg: ArchConfig,
+                       accel: AccelConfig, state: MLSTMState
+                       ) -> Tuple[jax.Array, MLSTMState]:
+    """O(1) recurrence. x [B, 1, d]."""
+    b, _, d = x.shape
+    hh = cfg.num_heads
+    d_in, dh = _mlstm_dims(cfg)
+    q, k, v, logi, logf, z, new_conv = _mlstm_qkv_gates(
+        params, x, cfg, state.conv)
+    qx = q[:, :, 0].astype(jnp.float32)                      # [B, H, dh]
+    kx = k[:, :, 0].astype(jnp.float32)
+    vx = v[:, :, 0].astype(jnp.float32)
+    li, lf = logi[:, :, 0], logf[:, :, 0]                    # [B, H]
+    m_new = jnp.maximum(lf + state.m, li)
+    fw = jnp.exp(lf + state.m - m_new)
+    iw = jnp.exp(li - m_new)
+    c = fw[..., None, None] * state.c + iw[..., None, None] * (
+        kx[..., :, None] * vx[..., None, :])                 # [B,H,dh,dh]
+    n = fw[..., None] * state.n + iw[..., None] * kx
+    h_num = jnp.einsum("bhd,bhde->bhe", qx, c)
+    denom = jnp.maximum(jnp.abs(jnp.sum(qx * n, axis=-1)), jnp.exp(-m_new))
+    h_out = h_num / denom[..., None]                         # [B, H, dh]
+    h_out = _mlstm_headnorm(params, h_out[:, :, None, :], cfg.norm_eps)[:, :, 0]
+    h_out = h_out.reshape(b, 1, d_in) * params["norm_scale"]
+    out = (h_out * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bte,ed->btd", out, params["down_proj"])
+    return out, MLSTMState(c, n, m_new, new_conv)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ArchConfig, dtype) -> Dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    d_ff = int(cfg.xlstm.slstm_proj_factor * d)
+    return {
+        "wx": dense_init(ks[0], d, 4 * d, dtype),            # i, f, z, o from x
+        # recurrent weights are per-head BLOCK-DIAGONAL (xLSTM paper)
+        "wr": (jax.random.normal(ks[1], (h, dh, 4 * dh), jnp.float32)
+               * (dh ** -0.5) * 0.1).astype(jnp.float32),
+        "b": jnp.concatenate([
+            jnp.zeros((d,), jnp.float32),                    # i
+            jnp.full((d,), 3.0, jnp.float32),                # f (remember)
+            jnp.zeros((2 * d,), jnp.float32),                # z, o
+        ]),
+        "norm_scale": jnp.ones((d,), jnp.float32),
+        # gated FFN after the cell (proj factor 4/3)
+        "w_ff1": dense_init(ks[2], d, 2 * d_ff, dtype),
+        "w_ff2": dense_init(jax.random.fold_in(ks[2], 1), d_ff, d, dtype),
+    }
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int, dtype) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=z)
+
+
+def _slstm_step(params, x_t, st: SLSTMState) -> Tuple[jax.Array, SLSTMState]:
+    """x_t [B, 4d] (pre-projected W x); returns (h_t [B, d], new state)."""
+    d = st.c.shape[-1]
+    wr = params["wr"]                                   # [H, dh, 4*dh]
+    h_, dh = wr.shape[0], wr.shape[1]
+    hh = st.h.reshape(-1, h_, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hh, wr)            # [B, H, 4dh]
+    rec = jnp.concatenate([g.reshape(-1, d) for g in
+                           jnp.split(rec, 4, axis=-1)], axis=-1)
+    pre = x_t + rec + params["b"]
+    li, lf, zt, ot = jnp.split(pre, 4, axis=-1)
+    lf = jax.nn.log_sigmoid(lf)
+    m_new = jnp.maximum(lf + st.m, li)
+    iw = jnp.exp(li - m_new)
+    fw = jnp.exp(lf + st.m - m_new)
+    c = fw * st.c + iw * jnp.tanh(zt)
+    n = fw * st.n + iw
+    h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
+    return h, SLSTMState(c, n, h, m_new)
+
+
+def apply_slstm(params, x: jax.Array, cfg: ArchConfig, accel: AccelConfig,
+                state: Optional[SLSTMState] = None
+                ) -> Tuple[jax.Array, Optional[SLSTMState]]:
+    """Sequential path (lax.scan over T). x [B, T, d]."""
+    b, t, d = x.shape
+    st = state if state is not None else init_slstm_state(cfg, b, x.dtype)
+    xw = jnp.einsum("btd,de->bte", x, params["wx"]).astype(jnp.float32)
+
+    def step(st, x_t):
+        h, st2 = _slstm_step(params, x_t, st)
+        return st2, h
+
+    st_f, hs = jax.lax.scan(step, st, jnp.moveaxis(xw, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1)                                # [B, T, d]
+    # RMS-normalize cell output, then gated FFN
+    ms = jnp.mean(h * h, axis=-1, keepdims=True)
+    h = (h * jax.lax.rsqrt(ms + cfg.norm_eps) * params["norm_scale"]
+         ).astype(x.dtype)
+    u, g = jnp.split(jnp.einsum("btd,de->bte", h, params["w_ff1"]), 2, axis=-1)
+    ff = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bte,ed->btd", ff, params["w_ff2"])
+    return out, (st_f if state is not None else None)
+
+
+def apply_slstm_decode(params, x: jax.Array, cfg: ArchConfig,
+                       accel: AccelConfig, state: SLSTMState
+                       ) -> Tuple[jax.Array, SLSTMState]:
+    out, st = apply_slstm(params, x, cfg, accel, state)
+    return out, st

@@ -1,0 +1,66 @@
+"""Weight-only int8 quantization for serving (beyond-paper optimization).
+
+The decode cells are MEMORY-bound on weight reads (§Roofline); NM-Carus's
+"integer arithmetic near the memory" maps onto storing serving weights as
+int8 + per-output-channel fp32 scales and dequantizing in-register at the
+matmul — HBM weight traffic halves vs bf16. On real TPU the
+``gemm/pallas_int8`` kernel consumes the int8 tiles directly in VMEM;
+the ref path computes x @ (q * scale) and its measured cost_analysis bytes
+tell us whether XLA keeps the dequant fused (the §Perf hypothesis).
+
+Quantized leaves keep their position in the params tree (a WeightQ
+NamedTuple one level below the weight's name) so the path-based sharding
+rules apply unchanged.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Projection weights that flow through the XAIF "gemm" op (quantization is
+# transparent there). Weights consumed by raw einsums (expert stacks, xLSTM
+# cells, MLA absorbed path) are left in bf16 — quantizing them needs the
+# respective op to grow a WeightQ path first.
+_QUANT_NAMES = frozenset({
+    "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "unembed",
+    "in_proj", "out_proj", "w_dkv",
+})
+
+
+class WeightQ(NamedTuple):
+    q: jax.Array          # int8, original shape
+    scale: jax.Array      # fp32, [..., 1, d_out] per-output-channel
+
+
+def quantize_leaf(w: jax.Array) -> WeightQ:
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=-2, keepdims=True)      # per out-channel
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return WeightQ(q, scale)
+
+
+def dequantize(wq: WeightQ, dtype=jnp.bfloat16) -> jax.Array:
+    return (wq.q.astype(jnp.float32) * wq.scale).astype(dtype)
+
+
+def quantize_weights_int8(params):
+    """Return the params tree with projection weights replaced by WeightQ."""
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if (k in _QUANT_NAMES and hasattr(v, "ndim") and v.ndim >= 2
+                        and jnp.issubdtype(v.dtype, jnp.floating)):
+                    out[k] = quantize_leaf(v)
+                else:
+                    out[k] = walk(v)
+            return out
+        if isinstance(node, (list, tuple)) and not hasattr(node, "shape"):
+            seq = [walk(v) for v in node]
+            return type(node)(seq) if not isinstance(node, tuple) else tuple(seq)
+        return node
+
+    return walk(params)

@@ -1,0 +1,157 @@
+"""The jitted training step: multi-exit loss, microbatched gradient
+accumulation, remat policy, AdamW — all generated from a RunConfig.
+
+``make_train_step(run)`` returns (init_state_fn, train_step_fn). The step is
+pure and pjit-friendly: state/batch shardings come from
+``repro.dist.sharding`` and the dry-run lowers exactly this function.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+from repro.core.early_exit import multi_exit_loss
+from repro.models import lm
+from repro.optim.adamw import AdamWState, adamw_update, cosine_schedule, init_adamw
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def chunked_head_loss(params, x, labels, cfg, accel, chunk: int,
+                      exit_states=None):
+    """Beyond-paper memory optimization: compute head-GEMM + CE over SEQ
+    CHUNKS so the fp32 [B, T, V] logits never exist — peak logits memory
+    drops T/chunk x (e.g. 4096/512 = 8x for a 150k vocab). jax.checkpoint
+    keeps the backward from re-materializing all chunks at once.
+
+    x: final hidden [B, T, d] (post-blocks, pre-norm); exit_states:
+    optional list of exit-point hiddens for the multi-exit loss.
+    Returns (mean loss over final+weighted exits, metrics).
+    """
+    from repro.core.early_exit import cross_entropy
+    b, t, _ = x.shape
+    nch = max(t // chunk, 1)
+
+    def one_chunk(args):
+        xc, lc, exits_c = args
+
+        def head_ce(hidden):
+            logits = lm._head(params, hidden, cfg, accel)
+            return cross_entropy(logits, lc)
+
+        loss = head_ce(xc)
+        exit_loss = jnp.zeros((), jnp.float32)
+        if exits_c is not None:
+            for i, ec in enumerate(exits_c):
+                el = lm._exit_logits(params, ec, i, cfg, accel)
+                exit_loss = exit_loss + cross_entropy(el, lc)
+        return loss, exit_loss
+
+    xs = (x.reshape(b, nch, t // nch, -1).swapaxes(0, 1),
+          labels.reshape(b, nch, t // nch).swapaxes(0, 1),
+          None if exit_states is None else tuple(
+              e.reshape(b, nch, t // nch, -1).swapaxes(0, 1)
+              for e in exit_states))
+
+    def scan_body(acc, args):
+        l, le = jax.checkpoint(one_chunk)(args)
+        return (acc[0] + l, acc[1] + le), None
+
+    (loss_sum, exit_sum), _ = jax.lax.scan(
+        scan_body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        xs if exit_states is not None else (xs[0], xs[1], None))
+    loss = loss_sum / nch
+    metrics = {"loss_final": loss}
+    if exit_states is not None and cfg.early_exit is not None:
+        n_exits = max(len(exit_states), 1)
+        le = exit_sum / nch / n_exits
+        metrics["loss_exit0"] = le
+        loss = loss + cfg.early_exit.loss_weight * le
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def make_train_step(run: RunConfig, use_master: bool = True,
+                    loss_chunk: int = None):
+    cfg = run.arch
+    accel = run.accel
+    loss_chunk = run.loss_chunk if loss_chunk is None else loss_chunk
+    schedule = cosine_schedule(run.learning_rate, warmup=100, total=10_000)
+
+    def init_state(key) -> TrainState:
+        params = lm.init_lm(key, cfg)
+        return TrainState(params, init_adamw(params, use_master))
+
+    def loss_fn(params, inputs, labels):
+        if loss_chunk:
+            x, exit_states, aux = lm.forward_train_hidden(
+                params, inputs, cfg, accel, remat=run.remat)
+            loss, metrics = chunked_head_loss(params, x, labels, cfg, accel,
+                                              loss_chunk, exit_states)
+        else:
+            logits, exits, aux = lm.forward_train(params, inputs, cfg, accel,
+                                                  remat=run.remat)
+            if cfg.early_exit is not None:
+                loss, metrics = multi_exit_loss(logits, exits, labels,
+                                                cfg.early_exit)
+            else:
+                from repro.core.early_exit import cross_entropy
+                loss = cross_entropy(logits, labels)
+                metrics = {"loss_final": loss}
+        loss = loss + aux["aux_loss"]
+        metrics["loss"] = loss
+        metrics["aux_loss"] = aux["aux_loss"]
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]
+                   ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        inputs, labels = batch["inputs"], batch["labels"]
+        nmb = run.microbatch
+        if nmb > 1:
+            # gradient accumulation: scan over microbatches (leading split)
+            def split(a):
+                return a.reshape(nmb, a.shape[0] // nmb, *a.shape[1:])
+            mb = (split(inputs), split(labels))
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+
+            def acc(carry, xs):
+                g_sum, _ = carry
+                (loss, metrics), g = grad_fn(state.params, xs[0], xs[1])
+                g_sum = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_sum, g)
+                return (g_sum, metrics), None
+
+            (grads, metrics), _ = jax.lax.scan(
+                acc, (zero_g, _zero_metrics(cfg)), mb)
+            grads = jax.tree_util.tree_map(lambda g: g / nmb, grads)
+        else:
+            (loss, metrics), grads = grad_fn(state.params, inputs, labels)
+        lr = schedule(state.opt.step + 1)   # +1: step counts updates DONE
+        new_params, new_opt, opt_metrics = adamw_update(
+            state.params, grads, state.opt, lr=lr,
+            weight_decay=run.weight_decay, grad_clip=run.grad_clip)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["lr"] = lr
+        return TrainState(new_params, new_opt), metrics
+
+    return init_state, train_step
+
+
+def _zero_metrics(cfg) -> Dict[str, jax.Array]:
+    z = jnp.zeros((), jnp.float32)
+    m = {"loss": z, "loss_final": z, "aux_loss": z}
+    if cfg.early_exit is not None:
+        for i in range(len(cfg.early_exit.exit_layers)):
+            m[f"loss_exit{i}"] = z
+    return m

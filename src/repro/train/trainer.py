@@ -1,0 +1,66 @@
+"""End-to-end trainer: data pipeline -> jitted step -> checkpoints, with the
+fault-tolerant loop. Works on the host mesh (tests/examples) and, unchanged,
+on a production mesh (the dry-run lowers the identical step function).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import RunConfig
+from repro.data.pipeline import Prefetcher, lm_batches
+from repro.dist.fault import ResilientLoop
+from repro.train.train_step import make_train_step
+
+
+def train(run: RunConfig, num_steps: int, checkpoint_dir: Optional[str] = None,
+          checkpoint_every: int = 50, log_every: int = 10,
+          batch_override: Optional[int] = None,
+          seq_override: Optional[int] = None,
+          print_fn=print) -> Dict[str, list]:
+    """Single-host training driver (reduced configs). Returns metric history."""
+    cfg = run.arch
+    b = batch_override or run.shape.global_batch
+    t = seq_override or run.shape.seq_len
+    init_fn, step_fn = make_train_step(run)
+    state = init_fn(jax.random.PRNGKey(run.seed))
+    # no donation here: eagerly-initialized states can alias identical
+    # constant buffers (e.g. two jnp.ones norm scales) and XLA rejects
+    # donating one buffer twice; the production path (launch/dryrun.py)
+    # donates — its states come from a jitted init with distinct outputs.
+    step_fn = jax.jit(step_fn)
+
+    data = Prefetcher(lm_batches(cfg.vocab_size, b, t, seed=run.seed))
+    history: Dict[str, list] = {}
+    start = 0
+    loop = None
+    if checkpoint_dir is not None:
+        ckpt = Checkpointer(checkpoint_dir)
+        loop = ResilientLoop(ckpt, checkpoint_every=checkpoint_every)
+        state, start = loop.resume(state)
+        if start:
+            print_fn(f"resumed from checkpoint @ step {start}")
+            data = Prefetcher(lm_batches(cfg.vocab_size, b, t, seed=run.seed,
+                                         start_step=start))
+
+    t_last = time.time()
+    for i, batch in zip(range(start, num_steps), data):
+        state, metrics = step_fn(state, {"inputs": batch["inputs"],
+                                         "labels": batch["labels"]})
+        for k, v in metrics.items():
+            history.setdefault(k, []).append(float(v))
+        if loop is not None and (i + 1) % checkpoint_every == 0:
+            loop.checkpointer.save_async(i + 1, state)
+        if (i + 1) % log_every == 0:
+            dt = (time.time() - t_last) / log_every
+            t_last = time.time()
+            print_fn(f"step {i+1}: loss={history['loss'][-1]:.4f} "
+                     f"grad_norm={history['grad_norm'][-1]:.3f} "
+                     f"({dt*1e3:.0f} ms/step)")
+    if loop is not None:
+        loop.checkpointer.wait()
+    return history

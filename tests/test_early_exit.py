@@ -1,0 +1,129 @@
+"""Tests for the paper's technique: entropy gating, multi-exit loss, batched
+exit merging, gated decode (CALM KV propagation) exactness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AccelConfig, EarlyExitConfig, get_arch
+from repro.core import early_exit as ee
+from repro.models import lm
+
+ACCEL = AccelConfig()
+
+
+def test_normalized_entropy_bounds():
+    lg = jax.random.normal(jax.random.PRNGKey(0), (64, 1000)) * 5
+    ent = ee.normalized_entropy(lg)
+    assert jnp.all(ent >= 0) and jnp.all(ent <= 1.0 + 1e-6)
+
+
+def test_should_exit_threshold_semantics():
+    confident = jnp.full((2, 100), -20.0).at[:, 0].set(20.0)
+    unsure = jnp.zeros((2, 100))
+    m1, _ = ee.should_exit(confident, 0.35)
+    m2, _ = ee.should_exit(unsure, 0.35)
+    assert bool(jnp.all(m1)) and not bool(jnp.any(m2))
+
+
+def test_multi_exit_loss_weighting():
+    key = jax.random.PRNGKey(1)
+    logits = jax.random.normal(key, (4, 8, 32))
+    exit_lg = jax.random.normal(jax.random.fold_in(key, 1), (4, 8, 32))
+    labels = jax.random.randint(jax.random.fold_in(key, 2), (4, 8), 0, 32)
+    for w in (0.001, 0.01, 0.1):
+        cfg = EarlyExitConfig(exit_layers=(1,), loss_weight=w)
+        loss, m = ee.multi_exit_loss(logits, (exit_lg,), labels, cfg)
+        expect = m["loss_final"] + w * m["loss_exit0"]
+        np.testing.assert_allclose(float(loss), float(expect), rtol=1e-6)
+
+
+def test_merge_exit_logits_selects_first_confident():
+    b, v = 6, 50
+    final = jnp.zeros((b, v)).at[:, 1].set(1.0)
+    # rows 0..2 confident at the exit, 3..5 not
+    exit_lg = jnp.zeros((b, v))
+    exit_lg = exit_lg.at[:3, 7].set(25.0)
+    cfg = EarlyExitConfig(exit_layers=(1,), entropy_threshold=0.45)
+    sel, idx, metrics = ee.merge_exit_logits(final, (exit_lg,), cfg)
+    assert jnp.argmax(sel[0]) == 7 and jnp.argmax(sel[5]) == 1
+    assert idx[0] == 0 and idx[5] == 1
+    np.testing.assert_allclose(float(metrics["exit_rate"]), 0.5)
+
+
+def test_gated_layer_fraction():
+    idx = jnp.asarray([0, 0, 1, 1])        # two exits at layer 8 of 32
+    frac = ee.gated_layer_fraction(idx, (8,), 32)
+    np.testing.assert_allclose(float(frac), 1.0 - (8 + 8 + 32 + 32) / 4 / 32)
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "chatglm3-6b"])
+def test_gated_decode_matches_full_when_no_exit(arch):
+    """With an impossible threshold the gated path must equal full decode."""
+    cfg = get_arch(arch).reduced()
+    cfg = dataclasses.replace(
+        cfg, early_exit=dataclasses.replace(cfg.early_exit,
+                                            entropy_threshold=-1.0))
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+    c1 = lm.init_cache(cfg, 2, 16)
+    _, c1 = lm.forward_prefill(params, toks, cfg, ACCEL, c1)
+    step = toks[:, :1]
+    full_lg, _, c_full = lm.forward_decode(params, step, cfg, ACCEL, c1,
+                                           with_exits=False)
+    c2 = lm.init_cache(cfg, 2, 16)
+    _, c2 = lm.forward_prefill(params, toks, cfg, ACCEL, c2)
+    gated_lg, mask, c_gated = lm.forward_decode_gated(params, step, cfg,
+                                                      ACCEL, c2)
+    assert not bool(jnp.any(mask))
+    np.testing.assert_allclose(np.asarray(gated_lg), np.asarray(full_lg),
+                               rtol=2e-3, atol=2e-3)
+    # caches identical too
+    for a, b in zip(jax.tree_util.tree_leaves(c_full.slots),
+                    jax.tree_util.tree_leaves(c_gated.slots)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+
+def test_gated_decode_skip_branch_and_kv_propagation():
+    """With threshold=2 (always exit) the skip branch runs; deeper-layer KV
+    must be written (CALM state propagation), not left stale."""
+    cfg = get_arch("yi-9b").reduced()
+    cfg = dataclasses.replace(
+        cfg, early_exit=dataclasses.replace(cfg.early_exit,
+                                            entropy_threshold=2.0))
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+    cache = lm.init_cache(cfg, 2, 16)
+    _, cache = lm.forward_prefill(params, toks, cfg, ACCEL, cache)
+    lg, mask, cache2 = lm.forward_decode_gated(params, toks[:, :1], cfg,
+                                               ACCEL, cache)
+    assert bool(jnp.all(mask))
+    # KV at position 8 of the LAST layer changed from zero
+    k_last = cache2.slots[0].k[-1]          # [B, Hkv, S, D]
+    assert float(jnp.max(jnp.abs(k_last[:, :, 8, :].astype(jnp.float32)))) > 0
+    # exit rate in serve engine
+    from repro.configs.base import RunConfig, SHAPES_BY_NAME
+    run = RunConfig(arch=cfg, shape=SHAPES_BY_NAME["decode_32k"], accel=ACCEL)
+    from repro.serve.engine import make_serve_step
+    step = make_serve_step(run, gated=True)
+    tok, info, _ = step(params, cache, toks[:, :1])
+    assert float(info["exit_rate"]) == 1.0
+
+
+def test_exit_rate_increases_with_threshold():
+    """Monotonicity: higher entropy threshold => more exits (paper's sweep)."""
+    cfg = get_arch("yi-9b").reduced()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                              cfg.vocab_size)
+    logits, exits, _ = lm.forward_train(params, toks, cfg, ACCEL)
+    rates = []
+    for th in (0.1, 0.3, 0.5, 0.9):
+        eecfg = dataclasses.replace(cfg.early_exit, entropy_threshold=th)
+        _, _, m = ee.merge_exit_logits(logits, exits, eecfg)
+        rates.append(float(m["exit_rate"]))
+    assert all(a <= b + 1e-9 for a, b in zip(rates, rates[1:])), rates

@@ -1,0 +1,187 @@
+"""Fault tolerance: checkpoint/restart bit-exactness, atomic commit under a
+simulated crash, async snapshotting, straggler detection, elastic restore,
+and int8-compressed gradient sync accuracy."""
+import os
+import shutil
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import AccelConfig, RunConfig, SHAPES_BY_NAME, get_arch
+from repro.data.pipeline import lm_batches
+from repro.dist.fault import FaultEvent, ResilientLoop, run_with_restarts
+from repro.train.train_step import make_train_step
+
+
+def _tiny_run():
+    cfg = get_arch("yi-9b").reduced(num_layers=2, d_model=32, num_heads=2,
+                                    num_kv_heads=2, d_ff=64, vocab_size=128,
+                                    head_dim=16)
+    return RunConfig(arch=cfg, shape=SHAPES_BY_NAME["train_4k"],
+                     accel=AccelConfig(), remat="nothing")
+
+
+def _batches(run, start=0):
+    return lm_batches(run.arch.vocab_size, 4, 16, seed=0, start_step=start)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    run = _tiny_run()
+    init_fn, _ = make_train_step(run)
+    state = init_fn(jax.random.PRNGKey(0))
+    ck = Checkpointer(str(tmp_path))
+    ck.save(7, state)
+    restored, step, _ = ck.restore(state)
+    assert step == 7
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomic_under_crash(tmp_path):
+    """A half-written step must never be picked up by restore."""
+    run = _tiny_run()
+    init_fn, _ = make_train_step(run)
+    state = init_fn(jax.random.PRNGKey(0))
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, state)
+    # simulate a crash mid-write of step 2: tmp dir left behind, no commit
+    os.makedirs(os.path.join(str(tmp_path), "step_2.tmp"))
+    with open(os.path.join(str(tmp_path), "step_2.tmp", "junk.npy"), "wb") as f:
+        f.write(b"partial")
+    assert ck.latest_step() == 1
+    _, step, _ = ck.restore(state)
+    assert step == 1
+
+
+def test_restart_is_bit_exact(tmp_path):
+    """Train 6 steps straight vs 3 steps + restart + 3 steps: identical."""
+    run = _tiny_run()
+    init_fn, step_fn = make_train_step(run)
+    step_fn = jax.jit(step_fn)
+
+    def run_steps(state, start, n):
+        for i, batch in zip(range(start, start + n), _batches(run, start)):
+            state, _ = step_fn(state, {"inputs": jnp.asarray(batch["inputs"]),
+                                       "labels": jnp.asarray(batch["labels"])})
+        return state
+
+    # uninterrupted
+    s_direct = run_steps(init_fn(jax.random.PRNGKey(0)), 0, 6)
+    # interrupted at 3 with checkpoint + restore
+    ck = Checkpointer(str(tmp_path))
+    s = run_steps(init_fn(jax.random.PRNGKey(0)), 0, 3)
+    ck.save(3, s)
+    s2, step, _ = ck.restore(s)
+    s_resumed = run_steps(s2, 3, 3)
+    for a, b in zip(jax.tree_util.tree_leaves(s_direct.params),
+                    jax.tree_util.tree_leaves(s_resumed.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_supervisor_restart_after_injected_failure(tmp_path):
+    run = _tiny_run()
+    init_fn, step_fn = make_train_step(run)
+    jstep = jax.jit(step_fn)
+
+    def sf(state, batch):
+        return jstep(state, {"inputs": jnp.asarray(batch["inputs"]),
+                             "labels": jnp.asarray(batch["labels"])})
+
+    loop = ResilientLoop(Checkpointer(str(tmp_path)), checkpoint_every=2)
+    state = run_with_restarts(
+        lambda: init_fn(jax.random.PRNGKey(0)), sf,
+        lambda start: _batches(run, start), num_steps=6, loop=loop,
+        inject_failure_at=4)
+    assert any(e.kind == "exception" for e in loop.events)
+    assert int(state.opt.step) == 6
+
+
+def test_straggler_detection(tmp_path):
+    loop = ResilientLoop(Checkpointer(str(tmp_path)), checkpoint_every=1000,
+                         straggler_factor=5.0)
+    calls = {"n": 0}
+
+    def slow_step(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 9:
+            time.sleep(0.25)
+        else:
+            time.sleep(0.01)
+        return state, {}
+
+    loop.run(0, slow_step, iter([{}] * 10), num_steps=10)
+    assert any(e.kind == "straggler" for e in loop.events)
+
+
+def test_async_checkpoint_snapshot_isolation(tmp_path):
+    """save_async must snapshot the state BEFORE training mutates it."""
+    ck = Checkpointer(str(tmp_path))
+    state = {"w": jnp.arange(8.0)}
+    ck.save_async(1, state)
+    state["w"] = state["w"] + 100.0     # mutate immediately after
+    ck.wait()
+    restored, _, _ = ck.restore(state)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.arange(8.0))
+
+
+def test_elastic_restore_new_mesh(tmp_path):
+    """Checkpoints are logical: restore onto a different mesh layout."""
+    ck = Checkpointer(str(tmp_path))
+    state = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ck.save(1, state)
+    mesh = jax.make_mesh((1,), ("data",))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    restored, _, _ = ck.restore(state, shardings=sh)
+    assert restored["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.arange(16.0).reshape(4, 4))
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    state = {"w": jnp.zeros(2)}
+    for s in (1, 2, 3, 4):
+        ck.save(s, state)
+    assert ck.all_steps() == [3, 4]
+
+
+def test_compressed_psum_accuracy():
+    """int8 gradient compression: relative error ~1% even on heavy-tailed
+    gradients (well below SGD noise at these batch sizes)."""
+    from repro.dist.collectives import (dequantize_blockwise,
+                                        quantize_blockwise)
+    x = jax.random.normal(jax.random.PRNGKey(0), (1024,)) * \
+        jnp.exp(jax.random.normal(jax.random.PRNGKey(1), (1024,)))
+    q, s, shape, pad = quantize_blockwise(x, 128)
+    back = dequantize_blockwise(q, s, shape, pad)
+    rel = float(jnp.linalg.norm(back - x) / jnp.linalg.norm(x))
+    assert rel < 0.02, rel
+    # gaussian gradients: well under 1%
+    g = jax.random.normal(jax.random.PRNGKey(2), (4096,))
+    q, s, shape, pad = quantize_blockwise(g, 128)
+    rel = float(jnp.linalg.norm(dequantize_blockwise(q, s, shape, pad) - g)
+                / jnp.linalg.norm(g))
+    assert rel < 0.01, rel
+
+
+def test_compressed_psum_shardmap():
+    """compressed_psum under shard_map on a 1-axis mesh == plain sum."""
+    from repro.dist.collectives import compressed_psum
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n,), ("pod",))
+    x = jax.random.normal(jax.random.PRNGKey(2), (n, 256))
+    from jax.sharding import PartitionSpec as P
+
+    out = jax.shard_map(lambda v: compressed_psum(v[0], "pod"),
+                        mesh=mesh, in_specs=(P("pod", None),),
+                        out_specs=P(None), check_vma=False)(x)
+    ref = jnp.sum(x, axis=0)
+    rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.02, rel

@@ -1,0 +1,125 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.early_exit import merge_exit_logits, normalized_entropy
+from repro.configs.base import EarlyExitConfig
+from repro.dist.collectives import dequantize_blockwise, quantize_blockwise
+from repro.kernels.entropy_exit import ops as ee_ops
+from repro.kernels.gemm import ref as gemm_ref
+from repro.kernels.rmsnorm import ops as rn_ops, ref as rn_ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(rows=st.integers(1, 16), vocab=st.integers(2, 300),
+       scale=st.floats(0.1, 10.0), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_entropy_always_in_unit_interval(rows, vocab, scale, seed):
+    lg = jax.random.normal(jax.random.PRNGKey(seed), (rows, vocab)) * scale
+    ent = normalized_entropy(lg)
+    assert np.all(np.asarray(ent) >= -1e-6)
+    assert np.all(np.asarray(ent) <= 1.0 + 1e-6)
+
+
+@given(rows=st.integers(1, 8), vocab=st.sampled_from([128, 384, 1000]),
+       seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_entropy_kernel_equals_oracle(rows, vocab, seed):
+    lg = jax.random.normal(jax.random.PRNGKey(seed), (rows, vocab)) * 4
+    a = np.asarray(ee_ops.entropy_pallas_op(lg, interpret=True))
+    b = np.asarray(normalized_entropy(lg))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+@given(m=st.sampled_from([1, 7, 64]), d=st.sampled_from([128, 384, 512]),
+       seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_rmsnorm_scale_invariant(m, d, seed):
+    """RMSNorm(c*x) == RMSNorm(x) for any positive scalar c (eps-limited)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, d)) + 0.1
+    s = jnp.ones((d,))
+    a = rn_ref.rmsnorm_ref(x, s)
+    b = rn_ref.rmsnorm_ref(x * 37.0, s)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3,
+                               atol=1e-3)
+
+
+@given(m=st.sampled_from([4, 32]), k=st.sampled_from([64, 128]),
+       n=st.sampled_from([32, 96]), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_int8_quant_roundtrip_error_bounded(m, k, n, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, k))
+    q, scale = gemm_ref.quantize_int8(x, -1)
+    back = q.astype(jnp.float32) * scale
+    # max error is half a quantization step per element
+    step = np.asarray(scale)
+    assert np.all(np.abs(np.asarray(back - x)) <= step / 2 + 1e-7)
+
+
+@given(n=st.integers(1, 2000), block=st.sampled_from([64, 128, 256]),
+       seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_blockwise_quant_roundtrip(n, block, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * 10
+    q, s, shape, pad = quantize_blockwise(x, block)
+    back = dequantize_blockwise(q, s, shape, pad)
+    assert back.shape == x.shape
+    err = np.max(np.abs(np.asarray(back - x)))
+    amax = float(jnp.max(jnp.abs(x)))
+    assert err <= amax / 127.0 + 1e-6
+
+
+@given(b=st.integers(1, 8), v=st.sampled_from([16, 64]),
+       th=st.floats(0.05, 0.95), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_merge_exit_never_mixes_rows(b, v, th, seed):
+    """Each row's merged logits equal EITHER the exit's or the final's."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    final = jax.random.normal(k1, (b, v))
+    exit_lg = jax.random.normal(k2, (b, v)) * 6
+    cfg = EarlyExitConfig(exit_layers=(1,), entropy_threshold=th)
+    sel, idx, _ = merge_exit_logits(final, (exit_lg,), cfg)
+    sel, final, exit_lg = map(np.asarray, (sel, final, exit_lg))
+    for i in range(b):
+        assert (np.allclose(sel[i], final[i])
+                or np.allclose(sel[i], exit_lg[i]))
+
+
+@given(seed=st.integers(0, 2**16), t=st.sampled_from([8, 32]),
+       din=st.sampled_from([8, 16]))
+@settings(max_examples=10, deadline=None)
+def test_ssm_scan_zero_input_is_zero(seed, t, din):
+    """Zero drive => zero output (h stays 0; D-skip of zero is zero)."""
+    from repro.kernels.ssm_scan import ref as ss_ref
+    n = 4
+    u = jnp.zeros((1, t, din))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(seed),
+                                           (1, t, din)))
+    a = -jnp.exp(jax.random.normal(jax.random.PRNGKey(seed + 1), (din, n)))
+    b = jax.random.normal(jax.random.PRNGKey(seed + 2), (1, t, n))
+    c = jax.random.normal(jax.random.PRNGKey(seed + 3), (1, t, n))
+    d = jax.random.normal(jax.random.PRNGKey(seed + 4), (din,))
+    y, h = ss_ref.selective_scan_ref(u, dt, a, b, c, d)
+    assert float(jnp.max(jnp.abs(y))) == 0.0
+    assert float(jnp.max(jnp.abs(h))) == 0.0
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_attention_causality(seed):
+    """Perturbing future tokens must not change past outputs."""
+    from repro.kernels.flash_attention import ops as fa_ops
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (1, 2, 32, 16))
+    k = jax.random.normal(ks[1], (1, 2, 32, 16))
+    v = jax.random.normal(ks[2], (1, 2, 32, 16))
+    out1 = fa_ops.attention_blockwise_op(q, k, v, True, bq=8, bkv=8)
+    k2 = k.at[:, :, 20:, :].add(jax.random.normal(ks[3], (1, 2, 12, 16)))
+    v2 = v.at[:, :, 20:, :].add(1.0)
+    out2 = fa_ops.attention_blockwise_op(q, k2, v2, True, bq=8, bkv=8)
+    np.testing.assert_allclose(np.asarray(out1[:, :, :20]),
+                               np.asarray(out2[:, :, :20]), rtol=1e-5,
+                               atol=1e-5)

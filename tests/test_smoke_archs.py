@@ -1,0 +1,152 @@
+"""Per-architecture smoke tests: a REDUCED config of the same family runs a
+forward + one train step on CPU; output shapes and finiteness asserted.
+(The FULL configs are exercised only by the dry-run, per the assignment.)"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import (AccelConfig, RunConfig, SHAPES_BY_NAME,
+                                applicable_shapes, get_arch, list_archs)
+from repro.models import lm
+from repro.train.train_step import make_train_step
+
+ARCHS = list_archs()
+
+
+def _inputs(cfg, b, t, key):
+    if cfg.frontend_stub:
+        return jax.random.normal(key, (b, t, cfg.d_model), jnp.float32)
+    return jax.random.randint(key, (b, t), 0, cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_arch(arch).reduced()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    x = _inputs(cfg, 2, 32, jax.random.PRNGKey(1))
+    logits, exits, aux = lm.forward_train(params, x, cfg, AccelConfig())
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert jnp.all(jnp.isfinite(logits.astype(jnp.float32)))
+    assert len(exits) == len(cfg.early_exit.exit_layers)
+    for e in exits:
+        assert e.shape == (2, 32, cfg.vocab_size)
+        assert jnp.all(jnp.isfinite(e.astype(jnp.float32)))
+    assert jnp.isfinite(aux["aux_loss"])
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch):
+    cfg = get_arch(arch).reduced()
+    run = RunConfig(arch=cfg, shape=SHAPES_BY_NAME["train_4k"],
+                    accel=AccelConfig(), remat="dots")
+    init_fn, step_fn = make_train_step(run)
+    state = init_fn(jax.random.PRNGKey(0))
+    x = _inputs(cfg, 2, 16, jax.random.PRNGKey(1))
+    labels = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                                cfg.vocab_size)
+    state2, metrics = jax.jit(step_fn)(state, {"inputs": x, "labels": labels})
+    assert jnp.isfinite(metrics["loss"])
+    assert metrics["grad_norm"] > 0
+    # params actually moved
+    moved = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        state.params, state2.params)
+    assert max(jax.tree_util.tree_leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    """Prefill+decode must reproduce the teacher-forced forward logits."""
+    cfg = get_arch(arch).reduced()
+    accel = AccelConfig()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    b, t = 2, 16
+    x = _inputs(cfg, b, t, jax.random.PRNGKey(1))
+    full_logits, _, _ = lm.forward_train(params, x, cfg, accel)
+    cache = lm.init_cache(cfg, b, t + 4)
+    last, cache = lm.forward_prefill(params, x, cfg, accel, cache)
+    # teacher forcing: the prefill's last-token logits == forward at t-1
+    assert jnp.allclose(last, full_logits[:, -1], rtol=2e-2, atol=2e-2), \
+        float(jnp.max(jnp.abs(last - full_logits[:, -1])))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_shapes_assignment_cells(arch):
+    """The assigned cells exist: long_500k only for sub-quadratic archs."""
+    cfg = get_arch(arch)
+    names = {s.name for s in applicable_shapes(cfg)}
+    assert {"train_4k", "prefill_32k", "decode_32k"} <= names
+    if arch in ("jamba-v0.1-52b", "xlstm-350m"):
+        assert "long_500k" in names
+    else:
+        assert "long_500k" not in names
+
+
+def test_exact_assigned_configs():
+    """The full configs match the assignment table exactly."""
+    c = get_arch("jamba-v0.1-52b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (32, 4096, 32, 8, 14336, 65536)
+    assert c.moe.num_experts == 16 and c.moe.top_k == 2
+    mixers = [b.mixer for b in c.block_pattern]
+    assert mixers.count("attn") == 1 and len(mixers) == 8
+    c = get_arch("yi-9b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (48, 4096, 32, 4, 11008, 64000)
+    c = get_arch("chatglm3-6b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (28, 4096, 32, 2, 13696, 65024)
+    assert c.rope == "partial" and c.qkv_bias
+    c = get_arch("mistral-large-123b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (88, 12288, 96, 8, 28672, 32768)
+    c = get_arch("qwen1.5-32b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (64, 5120, 40, 40, 27392, 152064)
+    c = get_arch("musicgen-medium")
+    assert (c.num_layers, c.d_model, c.num_heads, c.d_ff,
+            c.vocab_size) == (48, 1536, 24, 6144, 2048)
+    assert c.frontend_stub
+    c = get_arch("chameleon-34b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (48, 8192, 64, 8, 22016, 65536)
+    assert c.qk_norm and c.frontend_stub
+    c = get_arch("deepseek-v2-lite-16b")
+    assert (c.num_layers, c.d_model, c.num_heads,
+            c.vocab_size) == (27, 2048, 16, 102400)
+    assert c.moe.num_experts == 64 and c.moe.top_k == 6
+    assert c.mla.kv_lora_rank == 512 and c.first_k_dense == 1
+    c = get_arch("qwen3-moe-30b-a3b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.vocab_size) == (48, 2048, 32, 4, 151936)
+    assert c.moe.num_experts == 128 and c.moe.top_k == 8
+    c = get_arch("xlstm-350m")
+    assert (c.num_layers, c.d_model, c.num_heads,
+            c.vocab_size) == (24, 1024, 4, 50304)
+    assert c.d_ff == 0
+    mixers = [b.mixer for b in c.block_pattern]
+    assert mixers.count("slstm") == 1 and mixers.count("mlstm") == 7
+
+
+def test_param_counts_plausible():
+    """Total params within 20% of the checkpoint names' nominal sizes."""
+    nominal = {
+        "yi-9b": 9e9, "chatglm3-6b": 6e9, "mistral-large-123b": 123e9,
+        "qwen1.5-32b": 32e9, "chameleon-34b": 34e9,
+        "deepseek-v2-lite-16b": 16e9, "qwen3-moe-30b-a3b": 30e9,
+        "jamba-v0.1-52b": 52e9, "xlstm-350m": 350e6,
+    }
+    for name, n in nominal.items():
+        got = get_arch(name).param_count()
+        assert 0.7 * n < got < 1.35 * n, (name, got, n)
+
+
+def test_active_params_moe():
+    c = get_arch("qwen3-moe-30b-a3b")
+    active = c.active_param_count()
+    assert 2e9 < active < 4.5e9, active   # "A3B"
+    d = get_arch("deepseek-v2-lite-16b")
+    assert 1.5e9 < d.active_param_count() < 4e9
