@@ -1,5 +1,15 @@
 """Quickstart: build an assigned architecture at reduced size, train it a few
-steps with the early-exit loss, then decode with entropy-gated early exit.
+steps with the early-exit loss, then decode with entropy-gated early exit —
+first through the legacy host loop, then through the continuous-batching
+slot engine (the production serving path).
+
+Serving in one paragraph: ``SlotEngine(run, capacity=S, max_len=L)`` owns a
+fixed batch of S cache SLOTS. ``serve(engine, params, requests)`` admits
+each request into a free slot (one bucketed batch-1 prefill), decodes ALL
+occupied slots in jitted lax.scan chunks (greedy sampling, early-exit merge
+and statistics on device — one host transfer per chunk), and backfills
+retired slots without re-compiling. ``repro.launch.serve`` wraps the same
+path in a Poisson request-stream simulator with latency percentiles.
 
     PYTHONPATH=src python examples/quickstart.py [--arch yi-9b] [--steps 30]
 """
@@ -32,13 +42,28 @@ def main():
                     seq_override=64, log_every=10)
     print(f"loss: {history['loss'][0]:.3f} -> {history['loss'][-1]:.3f}")
 
-    # --- early-exit generation ---------------------------------------------
+    # --- early-exit generation (legacy host loop) --------------------------
     from repro.models import lm
     params = lm.init_lm(jax.random.PRNGKey(0), cfg)
     prompt = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0,
                                 cfg.vocab_size)
     tokens, stats = generate(run, params, prompt, max_new_tokens=8)
     print(f"generated {tokens.shape} tokens; exit stats: {stats}")
+
+    # --- continuous-batching slot engine -----------------------------------
+    import numpy as np
+    from repro.serve.engine import SlotEngine
+    from repro.serve.scheduler import Request, serve
+
+    engine = SlotEngine(run, capacity=2, max_len=32, chunk=4)
+    requests = [Request(rid=i, prompt=np.asarray(prompt[i]),
+                        max_new_tokens=8) for i in range(4)]
+    report = serve(engine, params, requests)   # 4 requests through 2 slots
+    lat = report.latency_percentiles()
+    print(f"slot engine: {report.decode_tokens} tokens at "
+          f"{report.tokens_per_s:.0f} tok/s "
+          f"(p50 {lat['p50']*1e3:.0f}ms, p99 {lat['p99']*1e3:.0f}ms); "
+          f"decode traces={engine.decode_traces}")
 
 
 if __name__ == "__main__":

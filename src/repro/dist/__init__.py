@@ -1,0 +1,5 @@
+"""Distribution layer: logical-axis sharding, fault tolerance, compressed
+collectives. Everything here is mesh-agnostic — modules consume the ambient
+shard context installed by ``sharding.shard_ctx`` and degrade to no-ops on a
+single device, so model code runs unchanged from laptop CPU to a multi-pod
+mesh (the "bus topology" side of the X-HEEP analogy)."""

@@ -1,0 +1,58 @@
+"""Compressed cross-replica collectives (beyond-paper bandwidth opt).
+
+Gradient all-reduce over the slow cross-pod axis dominates multi-pod step
+time; int8 blockwise quantization (per-128-element absmax scales, the
+NM-Carus "integer arithmetic near memory" trick applied to the wire) cuts
+the payload ~4x vs fp32 at ~1% relative error — far below SGD noise.
+
+``compressed_psum`` is the shard_map building block: quantize locally,
+all-gather the int8 payload + scales, dequantize-and-sum on every replica.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_blockwise(x: jax.Array, block: int = 128
+                       ) -> Tuple[jax.Array, jax.Array, Tuple[int, ...], int]:
+    """x (any shape) -> (q int8 [n_blocks, block], scales fp32 [n_blocks, 1],
+    original shape, pad). Per-block absmax scaling."""
+    shape = tuple(x.shape)
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    blocks = flat.reshape(-1, block)
+    amax = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale, shape, pad
+
+
+def dequantize_blockwise(q: jax.Array, scale: jax.Array,
+                         shape: Tuple[int, ...], pad: int) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+def compressed_psum(x: jax.Array, axis_name: str,
+                    block: int = 128) -> jax.Array:
+    """psum(x) over `axis_name` with int8-compressed payload.
+
+    Inside shard_map: each participant contributes its quantized blocks;
+    the sum is taken over DEQUANTIZED values so error stays per-contribution
+    (no int overflow), at 1/4 the fp32 wire bytes plus 1/32 for scales.
+    """
+    q, scale, shape, pad = quantize_blockwise(x, block)
+    qg = jax.lax.all_gather(q, axis_name)          # [N, n_blocks, block]
+    sg = jax.lax.all_gather(scale, axis_name)      # [N, n_blocks, 1]
+    total = jnp.sum(qg.astype(jnp.float32) * sg, axis=0)
+    flat = total.reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)

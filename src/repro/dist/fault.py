@@ -1,0 +1,110 @@
+"""Fault-tolerant training loop: supervisor restarts, straggler detection.
+
+The analogue of X-HEEP's always-on power/reset domain: the supervisor
+(`run_with_restarts`) owns the lifecycle, the `ResilientLoop` runs steps and
+periodically commits atomic checkpoints, and any step-time anomaly
+(exception, straggler) is recorded as a `FaultEvent` for the post-mortem.
+Restarts resume from the latest committed checkpoint with the data stream
+re-seeked to the restored step, so recovery is bit-exact (the data pipeline
+is deterministic in (seed, step)).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable, List, Optional, Tuple
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+@dataclass
+class FaultEvent:
+    kind: str                  # "exception" | "straggler" | "restart"
+    step: int
+    info: str = ""
+    t: float = field(default_factory=time.time)
+
+
+class _InjectedFailure(RuntimeError):
+    """Deterministic failure used by the chaos tests."""
+
+
+class ResilientLoop:
+    """Step runner with periodic atomic checkpoints + anomaly detection.
+
+    ``straggler_factor``: a step slower than factor x the running median of
+    previous step times is flagged (on a real pod this triggers hot-spare
+    swap; here it lands in ``events`` and the test asserts on it).
+    """
+
+    def __init__(self, checkpointer: Checkpointer, checkpoint_every: int = 50,
+                 straggler_factor: float = 3.0):
+        self.checkpointer = checkpointer
+        self.checkpoint_every = checkpoint_every
+        self.straggler_factor = straggler_factor
+        self.events: List[FaultEvent] = []
+
+    def record(self, kind: str, step: int, info: str = ""):
+        self.events.append(FaultEvent(kind, step, info))
+
+    def resume(self, state: Any) -> Tuple[Any, int]:
+        """(state, start_step) from the latest committed checkpoint, or the
+        passed-in state at step 0 when none exists."""
+        step = self.checkpointer.latest_step()
+        if step is None:
+            return state, 0
+        restored, step, _ = self.checkpointer.restore(state)
+        return restored, step
+
+    def run(self, state: Any, step_fn: Callable[[Any, Any], Tuple[Any, dict]],
+            batches: Iterable, num_steps: int, start_step: int = 0) -> Any:
+        """Run steps [start_step, num_steps); checkpoint every
+        ``checkpoint_every`` completed steps; time every step."""
+        durations: List[float] = []
+        for i, batch in zip(range(start_step, num_steps), batches):
+            t0 = time.time()
+            state, _ = step_fn(state, batch)
+            dt = time.time() - t0
+            if len(durations) >= 3:
+                med = sorted(durations)[len(durations) // 2]
+                if dt > self.straggler_factor * med:
+                    self.record("straggler", i, f"{dt:.3f}s vs median {med:.3f}s")
+            durations.append(dt)
+            if (i + 1) % self.checkpoint_every == 0:
+                self.checkpointer.save(i + 1, state)
+        return state
+
+
+def run_with_restarts(init_fn: Callable[[], Any],
+                      step_fn: Callable[[Any, Any], Tuple[Any, dict]],
+                      batches_fn: Callable[[int], Iterable],
+                      num_steps: int, loop: ResilientLoop,
+                      inject_failure_at: Optional[int] = None,
+                      max_restarts: int = 3) -> Any:
+    """Supervisor: (re)start the loop until ``num_steps`` complete.
+
+    Each attempt resumes from the latest checkpoint and re-seeks the data
+    stream via ``batches_fn(start_step)``. ``inject_failure_at`` raises once
+    at that global step (first attempt only) to exercise the recovery path.
+    """
+    failed_once = False
+    for attempt in range(max_restarts + 1):
+        state, start = loop.resume(init_fn())
+        if attempt:
+            loop.record("restart", start, f"attempt {attempt}")
+
+        def wrapped(s, batch, _ctr=[start]):
+            i = _ctr[0]
+            _ctr[0] += 1
+            if (inject_failure_at is not None and not failed_once
+                    and i == inject_failure_at):
+                raise _InjectedFailure(f"injected at step {i}")
+            return step_fn(s, batch)
+
+        try:
+            return loop.run(state, wrapped, batches_fn(start), num_steps,
+                            start_step=start)
+        except Exception as e:   # noqa: BLE001 — supervisor catches everything
+            failed_once = True
+            loop.record("exception", start, repr(e))
+    raise RuntimeError(f"gave up after {max_restarts} restarts")

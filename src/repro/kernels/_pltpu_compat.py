@@ -1,0 +1,9 @@
+"""Version compat for jax's Pallas TPU params.
+
+jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x; resolve
+whichever this jax ships so every kernel builds against either.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+compiler_params = (getattr(pltpu, "CompilerParams", None)
+                   or pltpu.TPUCompilerParams)

@@ -1,7 +1,15 @@
-"""Serving launcher: batched early-exit generation on a (reduced) arch.
+"""Serving launcher: request-stream simulator over the continuous-batching
+slot engine.
+
+Generates an open-loop Poisson arrival stream of ``--requests`` requests
+with mixed prompt lengths, serves it on ``--capacity`` slots, and reports
+decode throughput plus per-request latency percentiles (p50/p99):
 
     PYTHONPATH=src python -m repro.launch.serve --arch chatglm3-6b \
-        --batch 8 --new-tokens 16 [--gated]
+        --requests 32 --capacity 8 --rate 4 [--gated] [--threshold 0.9]
+
+``--rate 0`` disables arrival pacing (closed-loop: every request is ready
+at t=0 — the pure-throughput configuration the benchmarks use).
 """
 from __future__ import annotations
 
@@ -9,37 +17,68 @@ import argparse
 import dataclasses
 
 import jax
+import numpy as np
 
 from repro.configs.base import (AccelConfig, RunConfig, SHAPES_BY_NAME,
                                 get_arch, list_archs)
 from repro.models import lm
-from repro.serve.engine import generate
+from repro.serve.engine import SlotEngine
+from repro.serve.scheduler import poisson_requests, serve
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list_archs())
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--capacity", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="mean arrivals/s (Poisson); 0 = all at t=0")
+    ap.add_argument("--prompt-len-min", type=int, default=4)
+    ap.add_argument("--prompt-len-max", type=int, default=24)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="decode steps per jitted scan chunk")
     ap.add_argument("--threshold", type=float, default=None)
     ap.add_argument("--gated", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced()
-    if args.threshold is not None:
+    if args.threshold is not None and cfg.early_exit is not None:
         cfg = dataclasses.replace(cfg, early_exit=dataclasses.replace(
             cfg.early_exit, entropy_threshold=args.threshold))
     run = RunConfig(arch=cfg, shape=SHAPES_BY_NAME["decode_32k"],
                     accel=AccelConfig())
     params = lm.init_lm(jax.random.PRNGKey(0), cfg)
-    prompt = jax.random.randint(jax.random.PRNGKey(1),
-                                (args.batch, args.prompt_len), 0,
-                                cfg.vocab_size)
     gated = args.gated and all(b.mixer == "attn" for b in cfg.block_pattern)
-    tokens, stats = generate(run, params, prompt,
-                             max_new_tokens=args.new_tokens, gated=gated)
-    print(f"served batch={args.batch}: tokens {tokens.shape}; stats {stats}")
+
+    assert args.prompt_len_max + args.new_tokens <= args.max_len, \
+        "--max-len must fit prompt + generation"
+    requests = poisson_requests(
+        num=args.requests,
+        rate_hz=(args.rate if args.rate > 0 else np.inf),
+        prompt_lens=(args.prompt_len_min, args.prompt_len_max),
+        max_new_tokens=args.new_tokens,
+        vocab_size=cfg.vocab_size, seed=args.seed)
+
+    engine = SlotEngine(run, capacity=args.capacity, max_len=args.max_len,
+                        chunk=args.chunk, gated=gated)
+    report = serve(engine, params, requests, realtime=args.rate > 0)
+
+    lat = report.latency_percentiles()
+    print(f"arch={cfg.name} capacity={args.capacity} "
+          f"requests={args.requests} rate={args.rate or 'inf'}/s "
+          f"gated={gated}")
+    print(f"  traces: decode={engine.decode_traces} "
+          f"prefill_buckets={engine.prefill_traces} "
+          f"(decode chunks run: {engine.decode_calls})")
+    print(f"  throughput: {report.decode_tokens} tokens in "
+          f"{report.wall_s:.2f}s = {report.tokens_per_s:.1f} tok/s")
+    print(f"  latency: p50={lat['p50']*1e3:.0f}ms p99={lat['p99']*1e3:.0f}ms "
+          f"mean={lat['mean']*1e3:.0f}ms")
+    print(f"  exit stats: exit_rate={report.stats['exit_rate']:.2%} "
+          f"gated_fraction={report.stats['gated_fraction']:.2%}")
 
 
 if __name__ == "__main__":

@@ -51,6 +51,26 @@ def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> MLACache
     )
 
 
+def fill_slot(cache, src, slot, axis: int = 0):
+    """Write a batch-1 prefilled KV/MLA cache into batch row ``slot``.
+
+    ``src`` may be a shorter-sequence cache (bucketed prefill): its K/V land
+    at positions [0, src_len) of the slot row; stale tail positions are
+    masked by the per-slot length until decode overwrites them. ``axis`` is
+    the batch axis — 0 for per-layer caches, 1 for [n_sb, B, ...] stacked
+    slot states.
+    """
+    from repro.models.layers import cache_write_row
+    return type(cache)(*(cache_write_row(d, s, slot, axis)
+                         for d, s in zip(cache, src)))
+
+
+def reset_slot(cache, slot, axis: int = 0):
+    """Zero batch row ``slot`` (slot retirement / backfill hygiene)."""
+    from repro.models.layers import cache_zero_row
+    return type(cache)(*(cache_zero_row(d, slot, axis) for d in cache))
+
+
 # ---------------------------------------------------------------------------
 # GQA attention
 # ---------------------------------------------------------------------------

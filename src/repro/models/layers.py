@@ -15,6 +15,35 @@ from repro.configs.base import AccelConfig, ArchConfig
 from repro.core import xaif
 
 # ---------------------------------------------------------------------------
+# Slot-indexed cache writes (continuous-batching serve engine)
+# ---------------------------------------------------------------------------
+
+
+def cache_write_row(dst: jax.Array, src: jax.Array, slot,
+                    axis: int = 0) -> jax.Array:
+    """Write a size-1 batch block ``src`` into ``dst`` at row ``slot``.
+
+    The primitive behind every slot-indexed cache fill: ``src`` has the same
+    rank as ``dst`` with size 1 along ``axis`` and any dimension elsewhere
+    ≤ the destination's (a bucket-length prefill cache lands in the front of
+    a max-length slot row; recurrent states match exactly). All other start
+    offsets are 0.
+    """
+    assert src.ndim == dst.ndim, (src.shape, dst.shape)
+    idx = [0] * dst.ndim
+    idx[axis] = slot
+    return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype),
+                                        tuple(idx))
+
+
+def cache_zero_row(dst: jax.Array, slot, axis: int = 0) -> jax.Array:
+    """Zero row ``slot`` of ``dst`` along ``axis`` (slot retirement)."""
+    shape = list(dst.shape)
+    shape[axis] = 1
+    return cache_write_row(dst, jnp.zeros(shape, dst.dtype), slot, axis)
+
+
+# ---------------------------------------------------------------------------
 # Init helpers
 # ---------------------------------------------------------------------------
 

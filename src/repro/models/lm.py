@@ -348,11 +348,75 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> LMCache:
                    pos=jnp.zeros((batch,), jnp.int32))
 
 
+# ----- slot-indexed cache API (continuous-batching serve engine) ------------
+#
+# The serve scheduler treats the cache's batch dimension as SLOTS: a request
+# is admitted by prefilling a batch-1 cache and writing it into a free slot
+# row; retirement zeroes the row and the slot is backfilled by the next
+# request. Prompt-length and batch-occupancy variation become slot STATE
+# (per-slot ``pos`` lengths), never trace shape — the decode step is jitted
+# once for the full capacity.
+
+
+def _state_fill(state, src, slot, axis):
+    if isinstance(state, (attn.KVCache, attn.MLACache)):
+        return attn.fill_slot(state, src, slot, axis)
+    if isinstance(state, mamba_mod.MambaState):
+        return mamba_mod.fill_slot(state, src, slot, axis)
+    from repro.models.layers import cache_write_row   # xLSTM et al.
+    return jax.tree_util.tree_map(
+        lambda d, s: cache_write_row(d, s, slot, axis), state, src)
+
+
+def _state_reset(state, slot, axis):
+    if isinstance(state, (attn.KVCache, attn.MLACache)):
+        return attn.reset_slot(state, slot, axis)
+    if isinstance(state, mamba_mod.MambaState):
+        return mamba_mod.reset_slot(state, slot, axis)
+    from repro.models.layers import cache_zero_row
+    return jax.tree_util.tree_map(
+        lambda d: cache_zero_row(d, slot, axis), state)
+
+
+def fill_slot(cache: LMCache, src: LMCache, slot, length) -> LMCache:
+    """Insert a batch-1 prefilled ``src`` cache into row ``slot``.
+
+    ``length`` is the request's TRUE prompt length (≤ the src cache's
+    sequence capacity when prompts are bucket-padded); it becomes the
+    per-slot position so decode masks exactly the valid prefix.
+    """
+    new_prefix = tuple(_state_fill(c, s, slot, axis=0)
+                       for c, s in zip(cache.prefix, src.prefix))
+    new_slots = tuple(_state_fill(c, s, slot, axis=1)
+                      for c, s in zip(cache.slots, src.slots))
+    return LMCache(new_prefix, new_slots,
+                   cache.pos.at[slot].set(jnp.asarray(length, jnp.int32)))
+
+
+def reset_slot(cache: LMCache, slot) -> LMCache:
+    """Retire row ``slot``: zero its states and length."""
+    new_prefix = tuple(_state_reset(c, slot, axis=0) for c in cache.prefix)
+    new_slots = tuple(_state_reset(c, slot, axis=1) for c in cache.slots)
+    return LMCache(new_prefix, new_slots, cache.pos.at[slot].set(0))
+
+
+def slot_lengths(cache: LMCache) -> jax.Array:
+    """Per-slot current lengths [B] (prompt + generated so far)."""
+    return cache.pos
+
+
 def forward_prefill(params, inputs, cfg: ArchConfig, accel: AccelConfig,
-                    cache: LMCache):
-    """Full-sequence prefill filling caches; returns (last_logits, cache)."""
+                    cache: LMCache, lengths: Optional[jax.Array] = None):
+    """Full-sequence prefill filling caches; returns (last_logits, cache).
+
+    ``lengths`` [B]: optional per-sequence TRUE lengths for right-padded
+    inputs — logits are gathered at each sequence's last real token and the
+    cache records the true length, so one trace serves a whole
+    prompt-length bucket. Without it, every position is real (seed
+    behavior).
+    """
     x = _embed(params, inputs, cfg)
-    t = x.shape[1]
+    b, t = x.shape[0], x.shape[1]
     new_prefix = []
     for i in range(cfg.first_k_dense):
         x, _, ns = _apply_layer(params["prefix"][i], x, cfg.layer_spec(i), cfg,
@@ -361,9 +425,14 @@ def forward_prefill(params, inputs, cfg: ArchConfig, accel: AccelConfig,
     x, _, new_slots = _scan_segment(params["slots"], x, 0,
                                     cfg.num_superblocks, cfg, accel,
                                     mode="prefill", states=cache.slots)
-    last = x[:, -1:, :]
+    if lengths is None:
+        last = x[:, -1:, :]
+        pos = jnp.full_like(cache.pos, t)
+    else:
+        last = jnp.take_along_axis(
+            x, (lengths - 1).astype(jnp.int32)[:, None, None], axis=1)
+        pos = lengths.astype(jnp.int32)
     logits = _head(params, last, cfg, accel)
-    pos = jnp.full_like(cache.pos, t)
     return logits[:, 0], LMCache(tuple(new_prefix), tuple(new_slots), pos)
 
 
@@ -439,14 +508,19 @@ def _kv_propagate_layer(p, x_exit, cfg: ArchConfig, accel, state, cache_pos):
 
 
 def forward_decode_gated(params, tokens, cfg: ArchConfig, accel: AccelConfig,
-                         cache: LMCache):
+                         cache: LMCache, live: Optional[jax.Array] = None):
     """Early-exit decode with REAL compute gating (attention-only archs).
 
     Runs layers up to the (single) exit head, takes the entropy decision,
-    and — when EVERY sequence in the batch is confident — skips the
+    and — when every LIVE sequence in the batch is confident — skips the
     remaining layers entirely via lax.cond, filling their KV caches by CALM
     state propagation so later steps stay exact. Mixed batches fall through
     to the full path (per-sequence gating needs compaction; see DESIGN.md).
+
+    ``live`` [B] bool: slots that still matter (the slot engine's occupied,
+    not-done rows). Dead slots can't veto the whole-batch skip — their
+    outputs are discarded by the caller and their cache rows are either
+    overwritten before becoming readable or belong to retired requests.
 
     Returns (logits [B, V], exit_mask [B], new_cache).
     """
@@ -470,6 +544,7 @@ def forward_decode_gated(params, tokens, cfg: ArchConfig, accel: AccelConfig,
                                      cache_pos=cache_pos)
     exit_lg = _exit_logits(params, x, 0, cfg, accel)[:, 0]
     exit_mask, _ = should_exit(exit_lg, cfg.early_exit.entropy_threshold, accel)
+    gate = exit_mask if live is None else (exit_mask | ~live)
     rest = jax.tree_util.tree_map(lambda a: a[exit_sb:n_sb], cache.slots)
 
     def cont(ops):
@@ -496,7 +571,7 @@ def forward_decode_gated(params, tokens, cfg: ArchConfig, accel: AccelConfig,
         _, new_rest = jax.lax.scan(body, x_in, (sliced, rest_states))
         return exit_lg, new_rest
 
-    logits, new_rest = jax.lax.cond(jnp.all(exit_mask), skip, cont, (x, rest))
+    logits, new_rest = jax.lax.cond(jnp.all(gate), skip, cont, (x, rest))
     new_slots = jax.tree_util.tree_map(
         lambda pre, post: jnp.concatenate([pre, post], axis=0),
         pre_states, new_rest)

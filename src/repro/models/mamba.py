@@ -59,6 +59,27 @@ def init_mamba_state(cfg: ArchConfig, batch: int, dtype) -> MambaState:
     )
 
 
+def fill_slot(state: MambaState, src: MambaState, slot,
+              axis: int = 0) -> MambaState:
+    """Write a batch-1 prefilled recurrent state into batch row ``slot``.
+
+    Unlike KV caches there is no per-position masking to hide garbage: the
+    (conv window, SSM state) pair must come from an EXACT-length prefill —
+    pad tokens would be folded into the recurrence. The serve engine
+    therefore prefils recurrent-mixer archs unpadded.
+    """
+    from repro.models.layers import cache_write_row
+    return MambaState(cache_write_row(state.conv, src.conv, slot, axis),
+                      cache_write_row(state.ssm, src.ssm, slot, axis))
+
+
+def reset_slot(state: MambaState, slot, axis: int = 0) -> MambaState:
+    """Zero both the conv window and SSM state of row ``slot``."""
+    from repro.models.layers import cache_zero_row
+    return MambaState(cache_zero_row(state.conv, slot, axis),
+                      cache_zero_row(state.ssm, slot, axis))
+
+
 def _split_xdbc(params, xc, cfg):
     """xc [B, T, Din] (post-conv) -> (dt, b, c)."""
     _, dt_rank, n = _dims(cfg)

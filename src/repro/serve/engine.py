@@ -1,18 +1,36 @@
-"""Batched serving engine with early-exit (CALM-style) decoding.
+"""Serving engines: the slot-based continuous-batching engine (production
+path) and the legacy host-driven loop (kept for the dry-run and examples).
 
-``make_serve_step`` builds the jitted one-token step the dry-run lowers:
-decode against the KV/SSM caches, merge exit-head logits by entropy
-threshold, greedy-sample. For attention-only architectures the gated
-variant skips post-exit layers via lax.cond with CALM KV propagation —
-real FLOP savings when the whole batch is confident (the TinyAI situation:
-the paper's batch-1 windows exit 73–82 % of the time).
+Continuous batching (the tentpole of this layer):
 
-``generate`` drives prefill + N decode steps and reports exit statistics
-and the gated-FLOP fraction for the energy model.
+  * The cache's batch dimension is a fixed set of SLOTS (``--capacity``).
+    A request is admitted by a bucketed batch-1 prefill written into a free
+    slot row (``lm.fill_slot``); prompt-length and occupancy variation is
+    slot STATE (per-slot ``pos``/budget/done), never trace shape.
+  * Decode is ONE jitted ``lax.scan`` over the whole slot batch
+    (``make_decode_chunk``): on-device greedy sampling, on-device
+    ``merge_exit_logits`` early-exit selection, and on-device accumulation
+    of exit-rate / gated-fraction statistics. The host sees one transfer
+    per decode CHUNK (tokens + slot state + stats), never per token.
+  * Early-exited work stops paying for depth through the existing gated
+    path (``gated=True`` → ``forward_decode_gated``'s lax.cond skip with
+    CALM KV propagation) on attention-only single-exit archs.
+
+The legacy ``generate`` remains the reference loop (tests compare the slot
+engine against it token-for-token); its per-token ``float(info[k])`` host
+sync is fixed — statistics stay on device until one fetch at the end.
+
+Known caveat (inherited from the seed's batched loop, not introduced here):
+capacity-dropping MoE shares one expert-capacity group across the decode
+batch, so a request's tokens can depend on its co-batch. With a STATIC
+batch the slot engine is token-identical to the reference; under backfill
+the composition changes and MoE archs may drop differently. Dropless MoE
+decode (per-sequence groups) is an open item — see ROADMAP.md.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +38,10 @@ import jax.numpy as jnp
 from repro.configs.base import RunConfig
 from repro.core.early_exit import gated_layer_fraction, merge_exit_logits
 from repro.models import lm
+
+# ---------------------------------------------------------------------------
+# Jitted step builders (shared by the dry-run lowering and the legacy loop)
+# ---------------------------------------------------------------------------
 
 
 def make_serve_step(run: RunConfig, gated: bool = False):
@@ -60,24 +82,257 @@ def make_prefill(run: RunConfig):
     return prefill
 
 
+_GENERATE_JIT_CACHE: Dict[tuple, tuple] = {}
+
+
+def _generate_fns(run: RunConfig, gated: bool):
+    """Jitted (prefill, step) cached across generate() calls — the seed
+    rebuilt both closures per call, so every generation re-compiled."""
+    key = (run.arch, tuple(sorted(dict(run.accel.backends).items())),
+           run.accel.interpret, gated)
+    if key not in _GENERATE_JIT_CACHE:
+        _GENERATE_JIT_CACHE[key] = (
+            jax.jit(make_prefill(run)),
+            jax.jit(make_serve_step(run, gated=gated)))
+    return _GENERATE_JIT_CACHE[key]
+
+
 def generate(run: RunConfig, params, prompt, max_new_tokens: int,
              max_len: Optional[int] = None, gated: bool = False
              ) -> Tuple[jax.Array, Dict[str, float]]:
-    """Greedy generation loop (host-driven). prompt [B, T] int32."""
+    """Greedy generation loop (host-driven, the REFERENCE path).
+
+    Per-step statistics accumulate as device scalars and are fetched ONCE
+    after the loop — the loop body never blocks on a host transfer, so
+    dispatch stays async (the seed's ``float(info[k])`` per token serialized
+    every step).
+    """
     cfg = run.arch
     b, t = prompt.shape[0], prompt.shape[1]
     max_len = max_len or (t + max_new_tokens)
     cache = lm.init_cache(cfg, b, max_len)
-    prefill = jax.jit(make_prefill(run))
-    step = jax.jit(make_serve_step(run, gated=gated))
+    prefill, step = _generate_fns(run, gated)
     tok, cache = prefill(params, cache, prompt)
     out = [tok]
-    stats = {"exit_rate": [], "gated_fraction": []}
+    stats: Dict[str, list] = {"exit_rate": [], "gated_fraction": []}
     for _ in range(max_new_tokens - 1):
         tok, info, cache = step(params, cache, tok[:, None])
         out.append(tok)
         for k in stats:
             if k in info:
-                stats[k].append(float(info[k]))
-    agg = {k: (sum(v) / len(v) if v else 0.0) for k, v in stats.items()}
+                stats[k].append(info[k])          # device scalar, no sync
+    agg = {k: (float(jnp.mean(jnp.stack(v))) if v else 0.0)
+           for k, v in stats.items()}
     return jnp.stack(out, axis=1), agg
+
+
+# ---------------------------------------------------------------------------
+# Slot engine: continuous batching over a fixed-capacity slot batch
+# ---------------------------------------------------------------------------
+
+
+class DecodeState(NamedTuple):
+    """Per-slot decode state + on-device statistics accumulators.
+
+    Empty slots are born ``done``; admission (``make_prefill_slot``) flips a
+    slot live, retirement is pure HOST bookkeeping (the next admission
+    overwrites the row) — so backfill never re-traces or touches device
+    state beyond the one prefill call.
+    """
+    tokens: jax.Array        # [S] i32 — last token per slot (next step input)
+    done: jax.Array          # [S] bool
+    generated: jax.Array     # [S] i32 — tokens produced (incl. prefill token)
+    budget: jax.Array        # [S] i32 — max_new_tokens per slot
+    exit_cnt: jax.Array      # f32 — Σ over steps of early-exited live slots
+    gated_layers: jax.Array  # f32 — Σ of per-slot gated layer fractions
+    live_cnt: jax.Array      # f32 — Σ over steps of live slots
+
+
+def init_decode_state(capacity: int) -> DecodeState:
+    z = jnp.zeros((), jnp.float32)
+    return DecodeState(
+        tokens=jnp.zeros((capacity,), jnp.int32),
+        done=jnp.ones((capacity,), bool),
+        generated=jnp.zeros((capacity,), jnp.int32),
+        budget=jnp.zeros((capacity,), jnp.int32),
+        exit_cnt=z, gated_layers=z, live_cnt=z)
+
+
+def make_prefill_slot(run: RunConfig, bucket_len: int):
+    """Jitted per-bucket admission: batch-1 prefill → fill_slot → slot vars.
+
+    One trace per (arch, bucket) pair; the slot index, true length and token
+    budget are traced arguments, so any request in the bucket reuses it.
+    """
+    cfg, accel = run.arch, run.accel
+
+    def prefill_slot(params, cache: lm.LMCache, st: DecodeState,
+                     tokens, true_len, slot, max_new):
+        slot_cache = lm.init_cache(cfg, 1, bucket_len)
+        logits, slot_cache = lm.forward_prefill(
+            params, tokens, cfg, accel, slot_cache,
+            lengths=true_len[None])
+        tok0 = jnp.argmax(logits[0], axis=-1).astype(jnp.int32)
+        cache = lm.fill_slot(cache, slot_cache, slot, true_len)
+        st = st._replace(
+            tokens=st.tokens.at[slot].set(tok0),
+            done=st.done.at[slot].set(max_new <= 1),
+            generated=st.generated.at[slot].set(1),
+            budget=st.budget.at[slot].set(max_new))
+        return cache, st, tok0
+
+    return prefill_slot
+
+
+def make_decode_chunk(run: RunConfig, steps: int, gated: bool = False):
+    """One jitted lax.scan of ``steps`` decode steps over the slot batch.
+
+    Everything stays on device: greedy sampling, early-exit merge, per-slot
+    done/budget bookkeeping, statistics accumulation. Done/empty slots keep
+    feeding their frozen token (their output is discarded and their cache
+    position is pinned, so the valid prefix never corrupts); the caller
+    performs ONE host fetch of (tokens [S, steps], state) per chunk.
+    """
+    cfg, accel = run.arch, run.accel
+    n_layers = cfg.num_layers
+
+    def body(params, carry, _):
+        cache, st = carry
+        live = ~st.done
+        if gated:
+            logits, exit_mask, new_cache = lm.forward_decode_gated(
+                params, st.tokens[:, None], cfg, accel, cache, live=live)
+            exited = exit_mask
+            # credit gated compute ONLY when the lax.cond skip branch
+            # actually ran (all live slots confident) — otherwise the
+            # full-depth path executed and nothing was saved
+            skipped = jnp.all(exit_mask | ~live)
+            el = cfg.early_exit.exit_layers[0]
+            gated_frac = jnp.where(exit_mask & skipped,
+                                   1.0 - el / n_layers, 0.0)
+        else:
+            logits, exit_lgs, new_cache = lm.forward_decode(
+                params, st.tokens[:, None], cfg, accel, cache)
+            if cfg.early_exit is not None and exit_lgs:
+                logits, exit_idx, _ = merge_exit_logits(
+                    logits, exit_lgs, cfg.early_exit, accel)
+                bounds = jnp.asarray(
+                    tuple(cfg.early_exit.exit_layers) + (n_layers,),
+                    jnp.float32)
+                exited = exit_idx < len(exit_lgs)
+                gated_frac = 1.0 - bounds[exit_idx] / n_layers
+            else:
+                exited = jnp.zeros_like(st.done)
+                gated_frac = jnp.zeros(st.done.shape, jnp.float32)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        next_tok = jnp.where(live, next_tok, st.tokens)
+        # pin cache positions of done/empty slots (their KV write lands one
+        # past the valid prefix and is overwritten before it could be read)
+        new_cache = new_cache._replace(
+            pos=jnp.where(live, new_cache.pos, cache.pos))
+        generated = st.generated + live.astype(jnp.int32)
+        live_f = live.astype(jnp.float32)
+        st = st._replace(
+            tokens=next_tok,
+            done=st.done | (generated >= st.budget),
+            generated=generated,
+            exit_cnt=st.exit_cnt + jnp.sum(exited.astype(jnp.float32) * live_f),
+            gated_layers=st.gated_layers + jnp.sum(gated_frac * live_f),
+            live_cnt=st.live_cnt + jnp.sum(live_f))
+        return (new_cache, st), next_tok
+
+    def decode_chunk(params, cache: lm.LMCache, st: DecodeState):
+        (cache, st), toks = jax.lax.scan(
+            functools.partial(body, params), (cache, st), None, length=steps)
+        return cache, st, jnp.swapaxes(toks, 0, 1)      # [S, steps]
+
+    return decode_chunk
+
+
+class SlotEngine:
+    """Jit lifecycle around the slot batch: one decode trace per capacity,
+    one prefill trace per prompt-length bucket, donated caches.
+
+    ``prompt_bucket``: prompts are right-padded up to the next multiple of
+    this (attention-style caches mask the pad via per-slot lengths). Archs
+    with recurrent mixers (Mamba/xLSTM) prefill at EXACT length — pad
+    tokens would be folded into the recurrence — at the cost of one trace
+    per distinct prompt length.
+    """
+
+    def __init__(self, run: RunConfig, capacity: int, max_len: int,
+                 chunk: int = 8, gated: bool = False, prompt_bucket: int = 16):
+        cfg = run.arch
+        if gated:
+            assert (cfg.early_exit is not None
+                    and len(cfg.early_exit.exit_layers) == 1
+                    and all(b.mixer == "attn" for b in cfg.block_pattern)), \
+                "gated decode needs an attention-only single-exit arch"
+        self.run = run
+        self.capacity = capacity
+        self.max_len = max_len
+        self.chunk = chunk
+        self.gated = gated
+        # prefix layers inherit their mixer from the pattern, so all-attn
+        # patterns are pad-safe end to end; recurrent mixers are not
+        self.pad_prompts = all(b.mixer == "attn" for b in cfg.block_pattern)
+        self.prompt_bucket = prompt_bucket if self.pad_prompts else 1
+        self.decode_traces = 0
+        self.prefill_traces = 0
+        self.decode_calls = 0
+
+        def counted_decode(params, cache, st):
+            self.decode_traces += 1          # runs at TRACE time only
+            return make_decode_chunk(run, chunk, gated)(params, cache, st)
+
+        self._decode = jax.jit(counted_decode, donate_argnums=(1, 2))
+        self._prefill = {}                   # bucket_len -> jitted fn
+
+    # -- device state ------------------------------------------------------
+
+    def init_state(self) -> Tuple[lm.LMCache, DecodeState]:
+        # jitted so every leaf is a DISTINCT device buffer — eagerly built
+        # zero caches can alias identical constants, which breaks donation
+        # (same workaround as the trainer's init; see trainer.py)
+        return jax.jit(lambda: (
+            lm.init_cache(self.run.arch, self.capacity, self.max_len),
+            init_decode_state(self.capacity)))()
+
+    # -- admission ---------------------------------------------------------
+
+    def _bucket(self, t: int) -> int:
+        b = self.prompt_bucket
+        return min(-(-t // b) * b, self.max_len)
+
+    def prefill_into(self, params, cache, st, prompt, slot: int,
+                     max_new: int):
+        """Admit one request: bucketed batch-1 prefill into ``slot``.
+        prompt: 1-D int32 array/list. Returns (cache, st, first_token)."""
+        prompt = jnp.asarray(prompt, jnp.int32)
+        t = int(prompt.shape[0])
+        assert t + max_new <= self.max_len, (t, max_new, self.max_len)
+        bucket = self._bucket(t)
+        if bucket not in self._prefill:
+            self.prefill_traces += 1
+            self._prefill[bucket] = jax.jit(
+                make_prefill_slot(self.run, bucket),
+                donate_argnums=(1, 2))
+        padded = jnp.zeros((1, bucket), jnp.int32).at[0, :t].set(prompt)
+        return self._prefill[bucket](
+            params, cache, st, padded, jnp.asarray(t, jnp.int32),
+            jnp.asarray(slot, jnp.int32), jnp.asarray(max_new, jnp.int32))
+
+    # -- decode ------------------------------------------------------------
+
+    def decode(self, params, cache, st):
+        """Run one jitted chunk. Returns (cache, st, tokens [S, chunk])."""
+        self.decode_calls += 1
+        return self._decode(params, cache, st)
+
+    @staticmethod
+    def stats(st: DecodeState) -> Dict[str, float]:
+        """One host fetch of the on-device accumulators."""
+        n = max(float(st.live_cnt), 1.0)
+        return {"exit_rate": float(st.exit_cnt) / n,
+                "gated_fraction": float(st.gated_layers) / n,
+                "decode_slot_steps": float(st.live_cnt)}

@@ -4,3 +4,19 @@ import sys
 # Tests run on the single real CPU device — the 512-device override belongs
 # to launch/dryrun.py ONLY (see the dry-run spec).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+# Older jax (<=0.4.x) exposes shard_map under jax.experimental and spells
+# check_vma as check_rep; newer jax has jax.shard_map(check_vma=...).
+if not hasattr(jax, "shard_map"):
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def _compat_shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                          check_vma=None, **kw):
+        if check_vma is not None:
+            kw["check_rep"] = check_vma
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+
+    jax.shard_map = _compat_shard_map

@@ -53,10 +53,55 @@ def test_merge_exit_logits_selects_first_confident():
     np.testing.assert_allclose(float(metrics["exit_rate"]), 0.5)
 
 
+def test_merge_exit_logits_first_confident_ordering():
+    """A sample confident at SEVERAL exits must take the SHALLOWEST one
+    (depth order), not the last-processed — the CALM contract and what the
+    gated-fraction accounting assumes."""
+    b, v = 4, 50
+    final = jnp.zeros((b, v)).at[:, 1].set(1.0)
+    exit0 = jnp.zeros((b, v))
+    exit1 = jnp.zeros((b, v))
+    # row 0: confident at BOTH exits (different argmax per exit)
+    exit0 = exit0.at[0, 7].set(25.0)
+    exit1 = exit1.at[0, 9].set(25.0)
+    # row 1: confident only at the deeper exit
+    exit1 = exit1.at[1, 11].set(25.0)
+    # row 2: confident only at the shallow exit
+    exit0 = exit0.at[2, 13].set(25.0)
+    # row 3: never confident
+    cfg = EarlyExitConfig(exit_layers=(1, 2), entropy_threshold=0.45)
+    sel, idx, m = ee.merge_exit_logits(final, (exit0, exit1), cfg)
+    assert int(idx[0]) == 0 and int(jnp.argmax(sel[0])) == 7   # first wins
+    assert int(idx[1]) == 1 and int(jnp.argmax(sel[1])) == 11
+    assert int(idx[2]) == 0 and int(jnp.argmax(sel[2])) == 13
+    assert int(idx[3]) == 2 and int(jnp.argmax(sel[3])) == 1   # ran to end
+    np.testing.assert_allclose(float(m["exit_rate"]), 0.75)
+
+
 def test_gated_layer_fraction():
     idx = jnp.asarray([0, 0, 1, 1])        # two exits at layer 8 of 32
     frac = ee.gated_layer_fraction(idx, (8,), 32)
     np.testing.assert_allclose(float(frac), 1.0 - (8 + 8 + 32 + 32) / 4 / 32)
+
+
+def test_gated_layer_fraction_edge_cases():
+    # all samples exit at the single exit head: (1 - 8/32) gated
+    all_exit = jnp.zeros((6,), jnp.int32)
+    np.testing.assert_allclose(
+        float(ee.gated_layer_fraction(all_exit, (8,), 32)), 0.75)
+    # no sample exits: nothing gated
+    none_exit = jnp.ones((6,), jnp.int32)
+    np.testing.assert_allclose(
+        float(ee.gated_layer_fraction(none_exit, (8,), 32)), 0.0)
+    # a single sample (scalar-free shape [1])
+    single = jnp.asarray([0])
+    np.testing.assert_allclose(
+        float(ee.gated_layer_fraction(single, (24,), 32)), 0.25)
+    # multi-exit: samples spread over exits (4, 16) of 32
+    idx = jnp.asarray([0, 1, 2])
+    np.testing.assert_allclose(
+        float(ee.gated_layer_fraction(idx, (4, 16), 32)),
+        1.0 - (4 + 16 + 32) / 3 / 32)
 
 
 @pytest.mark.parametrize("arch", ["yi-9b", "chatglm3-6b"])

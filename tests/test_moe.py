@@ -90,7 +90,9 @@ def test_moe_aux_loss_balanced_vs_skewed():
     params = moe_mod.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
     x = jnp.abs(jax.random.normal(jax.random.PRNGKey(1),
                                   (2, 64, cfg.d_model))) + 0.1
-    _, aux_norm = moe_mod.apply_moe(params, x, cfg, ACCEL)
+    balanced = params.copy()
+    balanced["router"] = jnp.zeros_like(params["router"])  # truly uniform
+    _, aux_norm = moe_mod.apply_moe(balanced, x, cfg, ACCEL)
     skew = params.copy()
     skew["router"] = params["router"].at[:, 0].add(100.0)
     _, aux_skew = moe_mod.apply_moe(skew, x, cfg, ACCEL)
