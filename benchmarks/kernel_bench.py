@@ -8,6 +8,12 @@ Two things are reported per XAIF op:
   * the HBM-byte model of ref vs fused kernel (the NM-Carus data-movement
     argument): fused kernels make one pass where the unfused path makes
     2-3 — the ratio is the structural speedup the roofline credits.
+
+``tuned_vs_static()`` additionally runs the measured autotuner
+(core/autotune.py) and reports, per (op, shape-bucket) cell, the tuned
+DispatchPolicy's backend against the static AccelConfig default — the
+tuned pick is never slower on any measured cell (it is the argmin of a
+candidate set that includes the static default).
 """
 from __future__ import annotations
 
@@ -88,6 +94,37 @@ def bench() -> List[Dict]:
     return rows
 
 
+def tuned_vs_static(iters: int = 3, scale: int = 1) -> List[Dict]:
+    """One row per measured (op, bucket) cell: tuned policy vs the static
+    AccelConfig default, from the same measurement sweep."""
+    from repro.core.autotune import autotune
+
+    static = AccelConfig()
+    result = autotune(iters=iters, scale=scale, baseline=static)
+    rows = []
+    for cell in result.cells:
+        tuned_backend, tuning = cell.winner()
+        static_backend = static.backend_for(cell.op)
+        tuned_us = cell.us_for(tuned_backend)
+        static_us = cell.us_for(static_backend)
+        rows.append({
+            "op": cell.op, "bucket": cell.bucket,
+            "static_backend": static_backend, "static_us": static_us,
+            "tuned_backend": tuned_backend, "tuned_tuning": dict(tuning),
+            "tuned_us": tuned_us,
+            "speedup": static_us / tuned_us if tuned_us else float("inf"),
+            "not_slower": tuned_us <= static_us,
+        })
+    return rows
+
+
 if __name__ == "__main__":
     for r in bench():
         print(r)
+    print("--- autotuned DispatchPolicy vs static AccelConfig ---")
+    cells = tuned_vs_static()
+    for r in cells:
+        print(r)
+    assert all(r["not_slower"] for r in cells), \
+        "tuned policy slower than static default on a measured cell"
+    print(f"tuned policy not slower on all {len(cells)} measured cells")

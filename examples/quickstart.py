@@ -1,7 +1,8 @@
 """Quickstart: build an assigned architecture at reduced size, train it a few
 steps with the early-exit loss, then decode with entropy-gated early exit —
 first through the legacy host loop, then through the continuous-batching
-slot engine (the production serving path).
+slot engine (the production serving path) running under an autotuned
+shape-aware dispatch policy.
 
 Serving in one paragraph: ``SlotEngine(run, capacity=S, max_len=L)`` owns a
 fixed batch of S cache SLOTS. ``serve(engine, params, requests)`` admits
@@ -49,6 +50,21 @@ def main():
                                 cfg.vocab_size)
     tokens, stats = generate(run, params, prompt, max_new_tokens=8)
     print(f"generated {tokens.shape} tokens; exit stats: {stats}")
+
+    # --- autotune the XAIF dispatch policy ---------------------------------
+    # Measure every registered backend per (op, shape-bucket) cell and keep
+    # the winner; the resulting DispatchPolicy is hashable (a jit static
+    # arg) and JSON-persistable, so a serve launch can load it instead of
+    # re-measuring (repro.launch.serve --policy / --autotune). On this CPU
+    # host the ref/XLA backends usually win — that IS the measured answer;
+    # on a real TPU the same sweep selects the fused Pallas kernels.
+    from repro.core.autotune import autotune
+    tuned = autotune(ops=["attention", "rmsnorm"], iters=2)
+    for cell in tuned.cells:
+        backend, tuning = cell.winner()
+        print(f"autotune {cell.op}/{cell.bucket}: {backend} "
+              f"{dict(tuning) or ''}")
+    run = dataclasses.replace(run, accel=tuned.policy)
 
     # --- continuous-batching slot engine -----------------------------------
     import numpy as np

@@ -80,16 +80,31 @@ class EarlyExitConfig:
 
 @dataclass(frozen=True)
 class AccelConfig:
-    """XAIF analogue (C2): per-op backend selection.
+    """XAIF v1 static policy (C2): per-op backend selection.
 
-    ``backends`` maps op name -> backend name registered in core/xaif.py.
-    Unlisted ops fall back to "ref" (pure jnp — the "CPU-only" path of the
-    paper). ``interpret`` runs Pallas kernels in interpret mode (this
-    container is CPU-only; on real TPU it is False).
+    ``backends`` maps op name -> backend name registered in core/xaif.py;
+    a dict passed at construction is normalized to a sorted tuple of pairs
+    so the config is hashable (usable as a ``jax.jit`` static argument and
+    as a trace-cache key). Unlisted ops fall back to "ref" (pure jnp — the
+    "CPU-only" path of the paper). ``interpret`` runs Pallas kernels in
+    interpret mode (this container is CPU-only; on real TPU it is False).
+
+    Superseded by the shape-aware ``xaif.DispatchPolicy`` (which a measured
+    autotune produces — see core/autotune.py); both are accepted wherever a
+    dispatch policy is expected.
     """
 
-    backends: Mapping[str, str] = field(default_factory=dict)
+    # accepts a Mapping at construction; STORED as tuple(sorted(pairs)) so
+    # the frozen config hashes — read through backend_for(), not by indexing
+    backends: "Mapping[str, str] | Tuple[Tuple[str, str], ...]" = field(
+        default_factory=dict)
     interpret: bool = True
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "backends",
+            tuple(sorted((str(k), str(v))
+                         for k, v in dict(self.backends).items())))
 
     def backend_for(self, op: str) -> str:
         return dict(self.backends).get(op, "ref")
@@ -293,6 +308,8 @@ class ShardingPolicy:
 class RunConfig:
     arch: ArchConfig
     shape: ShapeConfig
+    # static AccelConfig or a shape-aware xaif.DispatchPolicy — both are
+    # hashable and flow through model code unchanged
     accel: AccelConfig = AccelConfig()
     sharding: ShardingPolicy = ShardingPolicy()
     remat: str = "dots"                # nothing | dots | full

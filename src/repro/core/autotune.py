@@ -1,0 +1,358 @@
+"""Measured XAIF backend autotuning (ROADMAP: "Backend autotuning").
+
+For every registered op this module enumerates the op's shape buckets
+(``xaif.op_buckets``), builds one representative workload per
+(op, bucket) cell, and *times every registered backend* on it — the
+FEMU-style measure-then-select exploration loop, applied to the JAX
+accelerator interface. The winner per cell (optionally including a sweep
+over the backend's declared block-size tunables) becomes one row of a
+:class:`~repro.core.xaif.DispatchPolicy`, which is
+
+  * never slower than any static ``AccelConfig`` on a measured cell **by
+    construction** — the static choice is one of the measured candidates
+    and the winner is the argmin;
+  * hashable and JSON-persistable: serve startup loads the policy file
+    instead of re-measuring (``launch/serve.py --policy/--autotune``).
+
+Each backend's ``cost_fn`` is reused as the *prior*: it estimates the
+cell's work before anything runs, sizes the timing loop (heavy cells get
+fewer iterations), and is recorded next to the measurement so reports can
+show measured-vs-modelled. Backends whose ``supports`` predicate rejects
+the cell, or that raise on it, are excluded from that cell only.
+
+CPU-container caveat: Pallas backends run in interpret mode here, whose
+timings are meaningless as TPU predictions — the ref/XLA backends will
+usually win, which is the *correct* measured answer for this host. On a
+real TPU the same sweep (``interpret=False``) selects the fused kernels.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AccelConfig
+from repro.core import xaif
+
+DEFAULT_POLICY_PATH = ".xaif_policy.json"
+
+# ---------------------------------------------------------------------------
+# Representative workloads per (op, bucket) cell
+# ---------------------------------------------------------------------------
+#
+# Sizes are deliberately modest so the sweep is a viable CI smoke step on
+# CPU; ``scale`` multiplies the row/sequence extents for real measurement
+# runs. Feature dims stay hardware-friendly (multiples of the VPU lane).
+
+
+def _key(i: int) -> jax.Array:
+    return jax.random.PRNGKey(i)
+
+
+def _scaled_rows(m: int, scale: int) -> int:
+    """Scale a row-cell size without crossing its shape-bucket boundary
+    (<=32 / <=2048 / beyond — see xaif._rows_bucket): the scaled cell must
+    still measure the bucket it is registered for."""
+    if m <= 32:
+        return min(m * scale, 32)
+    if m <= 2048:
+        return min(max(m * scale, 33), 2048)
+    return m * scale
+
+
+def _gemm_cell(m: int):
+    def build(scale: int):
+        mm, k, n = _scaled_rows(m, scale), 64 * scale, 64 * scale
+        x = jax.random.normal(_key(0), (mm, k), jnp.float32)
+        w = jax.random.normal(_key(1), (k, n), jnp.float32)
+        return (x, w), {}
+    return build
+
+
+def _rmsnorm_cell(m: int):
+    def build(scale: int):
+        x = jax.random.normal(_key(0), (_scaled_rows(m, scale), 128 * scale),
+                              jnp.float32)
+        s = jnp.ones((128 * scale,), jnp.float32)
+        return (x, s), {}
+    return build
+
+
+def _entropy_cell(m: int):
+    def build(scale: int):
+        lg = jax.random.normal(_key(0), (_scaled_rows(m, scale), 512 * scale),
+                               jnp.float32)
+        return (lg,), {}
+    return build
+
+
+def _attention_cell(t: int):
+    def build(scale: int):
+        s_len = 128 * scale
+        t_len = 1 if t == 1 else t * scale
+        q = jax.random.normal(_key(0), (2, 4, t_len, 32), jnp.float32)
+        k = jax.random.normal(_key(1), (2, 2, s_len, 32), jnp.float32)
+        v = jax.random.normal(_key(2), (2, 2, s_len, 32), jnp.float32)
+        return (q, k, v), {}
+    return build
+
+
+def _ssm_cell(t: int):
+    def build(scale: int):
+        t_len = 1 if t == 1 else t * scale
+        din, n = 32, 8
+        u = jax.random.normal(_key(0), (2, t_len, din), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(_key(1), (2, t_len, din),
+                                               jnp.float32))
+        a = -jnp.abs(jax.random.normal(_key(2), (din, n), jnp.float32))
+        b = jax.random.normal(_key(3), (2, t_len, n), jnp.float32)
+        c = jax.random.normal(_key(4), (2, t_len, n), jnp.float32)
+        d = jax.random.normal(_key(5), (din,), jnp.float32)
+        return (u, dt, a, b, c, d), {}
+    return build
+
+
+# (op, bucket) -> builder(scale) -> (args, kwargs). Row classes straddle the
+# xaif bucket boundaries (<=32 / <=2048 / beyond). One cell per
+# (op, xaif.op_buckets(op)) entry for every BUILT-IN op; ops registered
+# after the fact need a cell passed via ``autotune(cells=...)`` or they are
+# reported (not silently skipped).
+#
+# Serving caveat: the decode step's attention/recurrence is computed INLINE
+# by the cached decode paths (models/attention.py apply_*_decode,
+# models/mamba.py) — they do not dispatch "attention"/"ssm_scan" through
+# xaif, so those two decode cells tune any direct xaif.call at decode
+# shapes (benchmarks, prefill with T=1), not the serve engine's decode
+# mixers. The decode-relevant serving cells are the row-op ones
+# (gemm/rmsnorm/entropy rows_s): every projection, norm and exit check in
+# the decode step dispatches through them. Routing the cached decode
+# mixers through XAIF is a ROADMAP follow-up.
+CELLS: Dict[Tuple[str, str], Callable] = {
+    ("gemm", "rows_s"): _gemm_cell(8),
+    ("gemm", "rows_m"): _gemm_cell(256),
+    ("gemm", "rows_l"): _gemm_cell(2304),
+    ("rmsnorm", "rows_s"): _rmsnorm_cell(8),
+    ("rmsnorm", "rows_m"): _rmsnorm_cell(256),
+    ("rmsnorm", "rows_l"): _rmsnorm_cell(2304),
+    ("entropy_exit", "rows_s"): _entropy_cell(8),
+    ("entropy_exit", "rows_m"): _entropy_cell(256),
+    ("entropy_exit", "rows_l"): _entropy_cell(2304),
+    ("attention", "decode"): _attention_cell(1),
+    ("attention", "prefill"): _attention_cell(128),
+    ("ssm_scan", "decode"): _ssm_cell(1),
+    ("ssm_scan", "scan"): _ssm_cell(128),
+}
+
+
+def _cost_args(op: str, shapes) -> Optional[tuple]:
+    """Map cell argument shapes to the op's cost_fn positional dims."""
+    try:
+        if op == "gemm":
+            (xs, ws) = shapes[0], shapes[1]
+            m = 1
+            for dim in xs[:-1]:
+                m *= dim
+            return (m, xs[-1], ws[-1])
+        if op in ("rmsnorm", "entropy_exit"):
+            xs = shapes[0]
+            m = 1
+            for dim in xs[:-1]:
+                m *= dim
+            return (m, xs[-1])
+        if op == "attention":
+            q, k = shapes[0], shapes[1]
+            return (q[0], q[1], q[2], k[2], q[3])
+        if op == "ssm_scan":
+            u, a = shapes[0], shapes[2]
+            return (u[0], u[1], u[2], a[-1])
+    except (IndexError, TypeError):
+        pass
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Measurement
+# ---------------------------------------------------------------------------
+
+
+def _time_call(fn, args, iters: int) -> float:
+    """Best-of-``iters`` wall-clock microseconds (after one warmup that also
+    pays compilation)."""
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _tuning_variants(entry: xaif.BackendEntry,
+                     tune_block_sizes: bool) -> List[Tuple[Tuple[str, int], ...]]:
+    """Tuning configs to try: the backend default, plus (optionally) each
+    declared tunable swept one at a time — linear, not cartesian, so the
+    sweep stays O(sum of candidates)."""
+    variants: List[Tuple[Tuple[str, int], ...]] = [()]
+    if tune_block_sizes:
+        for name, candidates in entry.tunables:
+            for v in candidates:
+                variants.append(((name, int(v)),))
+    return variants
+
+
+@dataclass
+class CellReport:
+    """Every measurement taken for one (op, bucket) cell."""
+
+    op: str
+    bucket: str
+    # backend name -> best measured us (inf if it failed / unsupported)
+    measured_us: Dict[str, float] = field(default_factory=dict)
+    # backend name -> winning tuning tuple for that backend
+    best_tuning: Dict[str, Tuple[Tuple[str, int], ...]] = field(
+        default_factory=dict)
+    skipped: List[str] = field(default_factory=list)
+    prior: Optional[Dict[str, float]] = None   # cost_fn output for the cell
+
+    def winner(self) -> Tuple[str, Tuple[Tuple[str, int], ...]]:
+        name = min(self.measured_us, key=self.measured_us.get)
+        return name, self.best_tuning.get(name, ())
+
+    def us_for(self, backend: str) -> float:
+        return self.measured_us.get(backend, float("inf"))
+
+
+@dataclass
+class AutotuneResult:
+    policy: xaif.DispatchPolicy
+    cells: List[CellReport]
+    baseline: AccelConfig
+
+    def persist(self, path: str = DEFAULT_POLICY_PATH) -> str:
+        """Write the policy JSON (plus the measurements, which
+        DispatchPolicy.from_json ignores on load)."""
+        meas = [{"op": c.op, "bucket": c.bucket, "measured_us": c.measured_us,
+                 "skipped": c.skipped, "prior": c.prior}
+                for c in self.cells]
+        self.policy.save(path, measurements=meas)
+        return path
+
+
+def autotune(ops: Optional[Sequence[str]] = None, *,
+             interpret: bool = True,
+             iters: int = 3,
+             scale: int = 1,
+             tune_block_sizes: bool = False,
+             baseline: Optional[AccelConfig] = None,
+             default: str = "ref",
+             allow_lossy: bool = False,
+             cells: Optional[Dict[Tuple[str, str], Callable]] = None,
+             print_fn: Optional[Callable] = None) -> AutotuneResult:
+    """Measure every backend per (op, bucket) cell; return the winning
+    :class:`~repro.core.xaif.DispatchPolicy` plus the full report.
+
+    Cells come from the built-in ``CELLS`` table (every built-in op), plus
+    any ``cells`` mapping {(op, bucket): build(scale) -> (args, kwargs)}
+    for ops registered outside this repo; requested ops with no cell are
+    reported through ``print_fn`` rather than silently untuned.
+
+    ``baseline`` (default: the all-"ref" AccelConfig) names the static
+    choice each cell must at least match; its backend is always measured,
+    so the winner is never slower than it on any measured cell.
+
+    Backends registered ``lossy=True`` (on-the-fly quantization) are
+    excluded unless ``allow_lossy`` — a latency win must never silently
+    change model numerics; serve-time quantization stays an explicit
+    RunConfig choice (``weight_quant``), not an autotune side effect.
+    """
+    baseline = baseline if baseline is not None else AccelConfig(
+        interpret=interpret)
+    want = set(ops) if ops else set(xaif.ops())
+    say = print_fn or (lambda *_: None)
+    all_cells = dict(CELLS)
+    if cells:
+        all_cells.update(cells)
+    uncovered = want - {op for (op, _) in all_cells}
+    if uncovered:
+        say(f"  WARNING: no measurement cells for ops {sorted(uncovered)} "
+            f"— they stay on the policy default; pass cells= to tune them")
+    reports: List[CellReport] = []
+    rules: Dict[Tuple[str, str], xaif.DispatchRule] = {}
+
+    for (op, bucket), build in all_cells.items():
+        if op not in want:
+            continue
+        args, kwargs = build(scale)
+        shapes = tuple(tuple(a.shape) for a in args)
+        got = xaif.shape_bucket(op, shapes)
+        assert got == bucket, (op, bucket, got, shapes)
+        report = CellReport(op, bucket)
+
+        # the cost prior: estimate the cell's work before running anything,
+        # and shrink the timing loop for heavy cells
+        entries = xaif.entries_for(op)
+        cost_fn = next((e.cost_fn for e in entries if e.cost_fn), None)
+        dims = _cost_args(op, shapes)
+        if cost_fn is not None and dims is not None:
+            report.prior = {k: float(v) for k, v in cost_fn(*dims).items()}
+        cell_iters = iters
+        if report.prior and report.prior.get("flops", 0) > 1e9:
+            cell_iters = max(1, iters // 2)
+
+        must_measure = baseline.backend_for(op)
+        for entry in entries:
+            if entry.lossy and not allow_lossy and entry.name != must_measure:
+                report.skipped.append(entry.name)
+                continue
+            if not entry.accepts(shapes, None) and entry.name != must_measure:
+                report.skipped.append(entry.name)
+                continue
+            best_us, best_tuning = float("inf"), ()
+            for tuning in _tuning_variants(entry, tune_block_sizes):
+                kw = dict(tuning)
+                kw.update(kwargs)
+                if entry.takes_interpret:
+                    kw["interpret"] = interpret
+                try:
+                    fn = jax.jit(lambda *a, _f=entry.fn, _kw=kw: _f(*a, **_kw))
+                    us = _time_call(fn, args, cell_iters)
+                except Exception as e:      # noqa: BLE001 — backend can't run this cell
+                    say(f"  {op}/{bucket} {entry.name}{dict(tuning)}: "
+                        f"failed ({type(e).__name__})")
+                    continue
+                if us < best_us:
+                    best_us, best_tuning = us, tuning
+            if best_us < float("inf"):
+                report.measured_us[entry.name] = best_us
+                report.best_tuning[entry.name] = best_tuning
+            else:
+                report.skipped.append(entry.name)
+
+        if not report.measured_us:
+            say(f"  {op}/{bucket}: nothing measurable, cell skipped")
+            continue
+        name, tuning = report.winner()
+        rules[(op, bucket)] = xaif.DispatchRule(name, tuning)
+        say(f"  {op}/{bucket}: {name}{dict(tuning) or ''} "
+            f"{report.measured_us[name]:.0f}us "
+            f"(static {must_measure}: {report.us_for(must_measure):.0f}us)")
+        reports.append(report)
+
+    policy = xaif.DispatchPolicy.make(rules, interpret=interpret,
+                                      default=default)
+    return AutotuneResult(policy=policy, cells=reports, baseline=baseline)
+
+
+def load_or_autotune(path: str = DEFAULT_POLICY_PATH,
+                     **kwargs) -> xaif.DispatchPolicy:
+    """Serve-startup helper: load a persisted policy if present, otherwise
+    run the sweep once and persist it."""
+    import os
+    if os.path.exists(path):
+        return xaif.DispatchPolicy.load(path)
+    result = autotune(**kwargs)
+    result.persist(path)
+    return result.policy

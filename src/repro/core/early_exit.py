@@ -26,7 +26,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import AccelConfig, EarlyExitConfig
+from repro.configs.base import EarlyExitConfig
 from repro.core import xaif
 
 # ---------------------------------------------------------------------------
@@ -48,12 +48,12 @@ def normalized_entropy(logits: jax.Array, axis: int = -1) -> jax.Array:
     return ent / jnp.log(jnp.asarray(c, jnp.float32))
 
 
-def should_exit(logits: jax.Array, threshold: float, accel: Optional[AccelConfig] = None
+def should_exit(logits: jax.Array, threshold: float, policy: Optional[xaif.PolicyLike] = None
                 ) -> Tuple[jax.Array, jax.Array]:
     """Return (exit_mask, entropy). exit_mask is True where confidence is
     sufficient (normalized entropy strictly below the threshold)."""
-    if accel is not None:
-        ent = xaif.call("entropy_exit", accel, logits)
+    if policy is not None:
+        ent = xaif.call("entropy_exit", policy, logits)
     else:
         ent = normalized_entropy(logits)
     return ent < threshold, ent
@@ -76,13 +76,13 @@ def init_exit_head(key: jax.Array, d_model: int, vocab_size: int,
 
 
 def apply_exit_head(params: Dict[str, jax.Array], hidden: jax.Array,
-                    shared_unembed: Optional[jax.Array], accel: AccelConfig,
+                    shared_unembed: Optional[jax.Array], policy: xaif.PolicyLike,
                     norm_eps: float = 1e-5) -> jax.Array:
     """hidden [..., d_model] -> exit logits [..., vocab]."""
-    x = xaif.call("rmsnorm", accel, hidden, params["norm_scale"], eps=norm_eps)
+    x = xaif.call("rmsnorm", policy, hidden, params["norm_scale"], eps=norm_eps)
     w = params.get("unembed", shared_unembed)
     assert w is not None, "exit head has no classifier and no shared unembedding"
-    return xaif.call("gemm", accel, x, w)
+    return xaif.call("gemm", policy, x, w)
 
 
 # ---------------------------------------------------------------------------
@@ -128,7 +128,7 @@ def multi_exit_loss(final_logits: jax.Array,
 def merge_exit_logits(final_logits: jax.Array,
                       exit_logits: Tuple[jax.Array, ...],
                       cfg: EarlyExitConfig,
-                      accel: Optional[AccelConfig] = None
+                      policy: Optional[xaif.PolicyLike] = None
                       ) -> Tuple[jax.Array, jax.Array, Dict[str, jax.Array]]:
     """Batched early-exit selection.
 
@@ -145,7 +145,7 @@ def merge_exit_logits(final_logits: jax.Array,
     exited = jnp.zeros(final_logits.shape[:-1], bool)
     metrics: Dict[str, jax.Array] = {}
     for i in reversed(range(n)):
-        mask, ent = should_exit(exit_logits[i], cfg.entropy_threshold, accel)
+        mask, ent = should_exit(exit_logits[i], cfg.entropy_threshold, policy)
         selected = jnp.where(mask[..., None], exit_logits[i], selected)
         idx = jnp.where(mask, jnp.int32(i), idx)
         exited = exited | mask

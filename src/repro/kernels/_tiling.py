@@ -1,0 +1,66 @@
+"""Shared tiling / padding helpers for the XAIF kernel wrappers.
+
+Every ``kernels/*/ops.py`` used to carry its own copy of these (the seed
+duplicated ``_flatten`` / ``_pad_to`` / ``_ceil_mult`` per op directory);
+they live here now so block-size legality rules stay in one place and the
+autotuner can reason about them.
+
+All helpers are shape-static: they run at trace time, so using Python ints
+and ``jnp.pad`` keeps everything jit-compatible.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def flatten_lead(x) -> Tuple[jnp.ndarray, Tuple[int, ...]]:
+    """Collapse all leading dims of ``x`` into rows: [..., K] -> ([M, K], lead).
+
+    ``lead`` is returned so the caller can ``out.reshape(*lead, N)`` after
+    the kernel runs.
+    """
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+def pad_to(x, m: int, axis: int) -> Tuple[jnp.ndarray, int]:
+    """Right-pad ``axis`` of ``x`` with zeros to the next multiple of ``m``.
+
+    Returns (padded, amount_added). ``m <= 0`` or an already-aligned dim is
+    a no-op.
+    """
+    if m <= 1:
+        return x, 0
+    r = x.shape[axis] % m
+    if r == 0:
+        return x, 0
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, m - r)
+    return jnp.pad(x, pad), m - r
+
+
+def ceil_mult(dim: int, base: int = 128) -> int:
+    """Largest power-of-two block <= ``base`` that keeps tiny dims legal.
+
+    A dim of 5 with base 128 yields 8 (the TPU sublane floor), so padding
+    to the returned block never more than ~doubles a tiny dim while big
+    dims keep the full hardware-aligned block.
+    """
+    b = base
+    while b > dim and b > 8:
+        b //= 2
+    return b
+
+
+def divisor_block(dim: int, block: int) -> int:
+    """Largest power-of-two divisor of ``dim`` that is <= ``block``.
+
+    Used by kernels that cannot pad (e.g. single-pass row norms): the block
+    must divide the dim exactly. Falls back to 1 for odd dims.
+    """
+    b = max(block, 1)
+    while b > 1 and dim % b != 0:
+        b //= 2
+    return b

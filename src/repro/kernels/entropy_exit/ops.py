@@ -18,7 +18,8 @@ def entropy_ref_op(logits):
 
 
 @xaif.register("entropy_exit", "pallas", cost_fn=entropy_cost,
-               description="single-pass online-softmax entropy, blocked over vocab")
+               description="single-pass online-softmax entropy, blocked over vocab",
+               tunables={"bm": (128, 256, 512), "bv": (1024, 2048, 4096)})
 def entropy_pallas_op(logits, *, interpret: bool = False, bm: int = 256,
                       bv: int = 2048):
     lead = logits.shape[:-1]

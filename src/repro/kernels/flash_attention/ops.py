@@ -20,8 +20,17 @@ def attention_ref_op(q, k, v, causal: bool = True, scale: Optional[float] = None
     return _ref.attention_ref(q, k, v, causal, scale)
 
 
+def _pallas_attn_supports(shapes, _dtype):
+    # the fused kernel reuses the q BlockSpec head dim for v, so it cannot
+    # run MLA-style heads where v's head dim differs from q/k's (128 vs 192)
+    q, _, v = shapes[0], shapes[1], shapes[2]
+    return q[-1] == v[-1]
+
+
 @xaif.register("attention", "pallas", cost_fn=attention_cost,
-               description="blockwise flash attention, online softmax, GQA KV reuse")
+               description="blockwise flash attention, online softmax, GQA KV reuse",
+               supports=_pallas_attn_supports,
+               tunables={"bq": (128, 256, 512), "bkv": (256, 512, 1024)})
 def attention_pallas_op(q, k, v, causal: bool = True,
                         scale: Optional[float] = None, *,
                         interpret: bool = False, bq: int = 256, bkv: int = 512):
@@ -31,7 +40,8 @@ def attention_pallas_op(q, k, v, causal: bool = True,
 
 @xaif.register("attention", "blockwise", cost_fn=attention_cost,
                description="pure-jnp flash attention (lax.scan over blocks); "
-                           "the dry-run/XLA path — never materializes [T,S]")
+                           "the dry-run/XLA path — never materializes [T,S]",
+               tunables={"bq": (256, 512, 1024), "bkv": (512, 1024, 2048)})
 def attention_blockwise_op(q, k, v, causal: bool = True,
                            scale: Optional[float] = None, *,
                            bq: int = 512, bkv: int = 1024):

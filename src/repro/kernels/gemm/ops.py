@@ -1,13 +1,17 @@
 """Jit'd wrappers + XAIF registration for the fused GEMM kernels.
 
-Model code calls ``xaif.call("gemm", accel, x, w, bias=..., activation=...)``
+Model code calls ``xaif.call("gemm", policy, x, w, bias=..., activation=...)``
 with x of arbitrary leading shape [..., K]; the wrappers flatten, pad to
-block multiples, dispatch, and unpad. Backends:
+block multiples, dispatch, and unpad (shared helpers: kernels/_tiling.py).
+Backends:
 
   * ``ref``         — pure jnp (XLA), the host-CPU path
   * ``pallas``      — fused bf16/f32 VMEM kernel
   * ``pallas_int8`` — fused integer kernel with on-the-fly symmetric
                       quantization (NM-Carus "targets integer arithmetic")
+
+The Pallas backends declare their block sizes as XAIF tunables so the
+autotuner can sweep them per shape bucket.
 """
 from __future__ import annotations
 
@@ -17,22 +21,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import xaif
+from repro.kernels._tiling import ceil_mult, flatten_lead, pad_to
 from repro.kernels.gemm import gemm as _k
 from repro.kernels.gemm import ref as _ref
-
-
-def _flatten(x):
-    lead = x.shape[:-1]
-    return x.reshape(-1, x.shape[-1]), lead
-
-
-def _pad_to(x, m, axis):
-    r = x.shape[axis] % m
-    if r == 0:
-        return x, 0
-    pad = [(0, 0)] * x.ndim
-    pad[axis] = (0, m - r)
-    return jnp.pad(x, pad), m - r
 
 
 def gemm_cost(m, k, n, dtype_bytes=2):
@@ -58,23 +49,25 @@ def gemm_ref_op(x, w, bias: Optional[jax.Array] = None, activation: str = "none"
 
 
 @xaif.register("gemm", "pallas", cost_fn=gemm_cost,
-               description="fused VMEM-resident GEMM (bias+act, one HBM write)")
+               description="fused VMEM-resident GEMM (bias+act, one HBM write)",
+               tunables={"bm": (64, 128, 256), "bn": (64, 128, 256),
+                         "bk": (256, 512)})
 def gemm_pallas_op(x, w, bias: Optional[jax.Array] = None,
                    activation: str = "none", *, interpret: bool = False,
                    bm: int = 128, bn: int = 128, bk: int = 512):
     w = _unpack_weight(w, x.dtype)
-    x2, lead = _flatten(x)
+    x2, lead = flatten_lead(x)
     m, k = x2.shape
     n = w.shape[-1]
     # pad all three dims to hardware-aligned multiples
-    bm_, bn_, bk_ = min(bm, _ceil_mult(m)), min(bn, _ceil_mult(n)), min(bk, _ceil_mult(k))
-    x2, pm = _pad_to(x2, bm_, 0)
-    x2, pk = _pad_to(x2, bk_, 1)
-    wp, _ = _pad_to(w, bk_, 0)
-    wp, pn = _pad_to(wp, bn_, 1)
+    bm_, bn_, bk_ = min(bm, ceil_mult(m)), min(bn, ceil_mult(n)), min(bk, ceil_mult(k))
+    x2, pm = pad_to(x2, bm_, 0)
+    x2, pk = pad_to(x2, bk_, 1)
+    wp, _ = pad_to(w, bk_, 0)
+    wp, pn = pad_to(wp, bn_, 1)
     bp = None
     if bias is not None:
-        bp, _ = _pad_to(bias, bn_, 0)
+        bp, _ = pad_to(bias, bn_, 0)
     out = _k.gemm_pallas(x2, wp, bp, activation, bm=bm_, bn=bn_, bk=bk_,
                          interpret=interpret)
     out = out[: m, : n]
@@ -82,11 +75,14 @@ def gemm_pallas_op(x, w, bias: Optional[jax.Array] = None,
 
 
 @xaif.register("gemm", "pallas_int8", cost_fn=gemm_cost,
-               description="fused int8 GEMM, int32 acc, fused dequant (NM-Carus path)")
+               description="fused int8 GEMM, int32 acc, fused dequant (NM-Carus path)",
+               tunables={"bm": (64, 128, 256), "bn": (64, 128, 256),
+                         "bk": (256, 512)},
+               lossy=True)
 def gemm_int8_pallas_op(x, w, bias: Optional[jax.Array] = None,
                         activation: str = "none", *, interpret: bool = False,
                         bm: int = 128, bn: int = 128, bk: int = 512):
-    x2, lead = _flatten(x)
+    x2, lead = flatten_lead(x)
     m, k = x2.shape
     xq, xs = _ref.quantize_int8(x2, axis=-1)          # per-row
     if hasattr(w, "q") and hasattr(w, "scale"):
@@ -95,25 +91,17 @@ def gemm_int8_pallas_op(x, w, bias: Optional[jax.Array] = None,
     else:
         wq, ws = _ref.quantize_int8(w, axis=0)        # per-column
     n = wq.shape[-1]
-    bm_, bn_, bk_ = min(bm, _ceil_mult(m)), min(bn, _ceil_mult(n)), min(bk, _ceil_mult(k))
-    xq, _ = _pad_to(xq, bm_, 0)
-    xq, _ = _pad_to(xq, bk_, 1)
-    xs, _ = _pad_to(xs, bm_, 0)
-    wq, _ = _pad_to(wq, bk_, 0)
-    wq, _ = _pad_to(wq, bn_, 1)
-    ws, _ = _pad_to(ws, bn_, 1)
+    bm_, bn_, bk_ = min(bm, ceil_mult(m)), min(bn, ceil_mult(n)), min(bk, ceil_mult(k))
+    xq, _ = pad_to(xq, bm_, 0)
+    xq, _ = pad_to(xq, bk_, 1)
+    xs, _ = pad_to(xs, bm_, 0)
+    wq, _ = pad_to(wq, bk_, 0)
+    wq, _ = pad_to(wq, bn_, 1)
+    ws, _ = pad_to(ws, bn_, 1)
     bp = None
     if bias is not None:
-        bp, _ = _pad_to(bias.astype(jnp.float32), bn_, 0)
+        bp, _ = pad_to(bias.astype(jnp.float32), bn_, 0)
     out = _k.gemm_int8_pallas(xq, wq, xs, ws, bp, activation, bm=bm_, bn=bn_,
                               bk=bk_, out_dtype=x.dtype, interpret=interpret)
     out = out[: m, : n]
     return out.reshape(*lead, n)
-
-
-def _ceil_mult(dim: int, base: int = 128) -> int:
-    """Largest power-of-two block <= base that keeps tiny dims legal."""
-    b = base
-    while b > dim and b > 8:
-        b //= 2
-    return b

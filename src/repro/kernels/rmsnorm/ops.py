@@ -1,9 +1,8 @@
 """Jit'd wrapper + XAIF registration for fused RMSNorm."""
 from __future__ import annotations
 
-import jax.numpy as jnp
-
 from repro.core import xaif
+from repro.kernels._tiling import divisor_block
 from repro.kernels.rmsnorm import ref as _ref
 from repro.kernels.rmsnorm import rmsnorm as _k
 
@@ -19,18 +18,14 @@ def rmsnorm_ref_op(x, scale, eps: float = 1e-5):
 
 
 @xaif.register("rmsnorm", "pallas", cost_fn=rmsnorm_cost,
-               description="fused single-pass VMEM RMSNorm")
+               description="fused single-pass VMEM RMSNorm",
+               tunables={"bm": (64, 128, 256, 512)})
 def rmsnorm_pallas_op(x, scale, eps: float = 1e-5, *, interpret: bool = False,
                       bm: int = 256):
     lead = x.shape[:-1]
     d = x.shape[-1]
     x2 = x.reshape(-1, d)
-    m = x2.shape[0]
-    bm_ = bm
-    while m % bm_ != 0:                      # shrink block to a divisor
-        bm_ //= 2
-        if bm_ == 0:
-            bm_ = 1
-            break
+    # the single-pass kernel cannot pad rows: shrink to an exact divisor
+    bm_ = divisor_block(x2.shape[0], bm)
     out = _k.rmsnorm_pallas(x2, scale, eps, bm=bm_, interpret=interpret)
     return out.reshape(*lead, d)

@@ -1,9 +1,8 @@
 """Jit'd wrapper + XAIF registration for the selective scan."""
 from __future__ import annotations
 
-import jax.numpy as jnp
-
 from repro.core import xaif
+from repro.kernels._tiling import pad_to
 from repro.kernels.ssm_scan import ref as _ref
 from repro.kernels.ssm_scan import ssm_scan as _k
 
@@ -21,7 +20,8 @@ def ssm_ref_op(u, dt, a, b, c, d, h0=None):
 
 @xaif.register("ssm_scan", "assoc", cost_fn=ssm_cost,
                description="chunked associative scan (log-depth) — the "
-                           "TPU-parallel algorithm; dry-run default")
+                           "TPU-parallel algorithm; dry-run default",
+               tunables={"chunk": (128, 256, 512, 1024)})
 def ssm_assoc_op(u, dt, a, b, c, d, h0=None, *, chunk: int = 512):
     """Per chunk: prefix-scan the affine recurrence h' = A h + B with
     lax.associative_scan (log2(chunk) levels, all counted by cost_analysis),
@@ -67,16 +67,17 @@ def ssm_assoc_op(u, dt, a, b, c, d, h0=None, *, chunk: int = 512):
 
 
 @xaif.register("ssm_scan", "pallas", cost_fn=ssm_cost,
-               description="chunked scan, SSM state resident in VMEM")
+               description="chunked scan, SSM state resident in VMEM",
+               tunables={"bt": (64, 128, 256), "bd": (128, 256)})
 def ssm_pallas_op(u, dt, a, b, c, d, h0=None, *, interpret: bool = False,
                   bt: int = 128, bd: int = 256):
     bsz, t, din = u.shape
     bt_ = min(bt, t)
-    tpad = (t + bt_ - 1) // bt_ * bt_
-    if tpad != t:
-        pad3 = ((0, 0), (0, tpad - t), (0, 0))
-        u, dt = jnp.pad(u, pad3), jnp.pad(dt, pad3)
-        b, c = jnp.pad(b, pad3), jnp.pad(c, pad3)
+    u, padded = pad_to(u, bt_, 1)
+    if padded:
+        dt, _ = pad_to(dt, bt_, 1)
+        b, _ = pad_to(b, bt_, 1)
+        c, _ = pad_to(c, bt_, 1)
     y, h = _k.selective_scan_pallas(u, dt, a, b, c, d, h0, bt=bt, bd=bd,
                                     interpret=interpret)
     return y[:, :t], h

@@ -197,10 +197,10 @@ def _x_struct(cfg, batch, seq):
     return SDS((batch, seq, cfg.d_model), jnp.dtype(cfg.dtype))
 
 
-def _superblock_fwd(cfg, accel, mode="train"):
+def _superblock_fwd(cfg, policy, mode="train"):
     def f(slot_params, x):
         for j, spec in enumerate(cfg.block_pattern):
-            x, _, _ = lm._apply_layer(slot_params[j], x, spec, cfg, accel,
+            x, _, _ = lm._apply_layer(slot_params[j], x, spec, cfg, policy,
                                       mode="train")
         return x
     return f
@@ -220,7 +220,7 @@ def _component(fn, in_shardings, *structs, out_shardings=None,
 
 def component_costs(run: RunConfig, ctx) -> Dict[str, Any]:
     cfg, shape = run.arch, run.shape
-    accel = run.accel
+    policy = run.accel
     kind = shape.kind
     n_sb = cfg.num_superblocks
     b, t = shape.global_batch, shape.seq_len
@@ -242,7 +242,7 @@ def component_costs(run: RunConfig, ctx) -> Dict[str, Any]:
         x_sh = NamedSharding(ctx.mesh, shd.spec_for(
             x_s.shape, "batch", "sp" if run.sharding.sequence_parallel else None,
             None))
-        fwd = _superblock_fwd(cfg, accel)
+        fwd = _superblock_fwd(cfg, policy)
 
         def sb_vjp(slot_params, x, ct):
             y, pull = jax.vjp(fwd, slot_params, x)
@@ -276,11 +276,11 @@ def component_costs(run: RunConfig, ctx) -> Dict[str, Any]:
             x = lm._embed(hp, tokens, cfg)
 
             def f(hp_, x_):
-                logits = lm._head(hp_, x_, cfg, accel)
+                logits = lm._head(hp_, x_, cfg, policy)
                 loss = cross_entropy(logits, labels)
                 if cfg.early_exit is not None:
                     for i in range(len(cfg.early_exit.exit_layers)):
-                        el = lm._exit_logits(hp_, x_, i, cfg, accel)
+                        el = lm._exit_logits(hp_, x_, i, cfg, policy)
                         loss = loss + cfg.early_exit.loss_weight * \
                             cross_entropy(el, labels)
                 return loss
@@ -301,7 +301,7 @@ def component_costs(run: RunConfig, ctx) -> Dict[str, Any]:
             def pfx_vjp(p, x, ct):
                 def f(p_, x_):
                     y, _, _ = lm._apply_layer(p_, x_, cfg.layer_spec(0), cfg,
-                                              accel, mode="train")
+                                              policy, mode="train")
                     return y
                 y, pull = jax.vjp(f, p, x)
                 return pull(ct)
@@ -349,7 +349,7 @@ def component_costs(run: RunConfig, ctx) -> Dict[str, Any]:
             new_states = []
             for j, spec in enumerate(cfg.block_pattern):
                 x, _, ns = lm._apply_layer(slot_params[j], x, spec, cfg,
-                                           accel, state=states[j], mode=mode,
+                                           policy, state=states[j], mode=mode,
                                            cache_pos=pos)
                 new_states.append(ns)
             return x, tuple(new_states)
@@ -369,11 +369,11 @@ def component_costs(run: RunConfig, ctx) -> Dict[str, Any]:
         hp_sh = shd.param_shardings(hp_struct)
 
         def head_step(hp, x):
-            logits = lm._head(hp, x, cfg, accel)[:, -1]
+            logits = lm._head(hp, x, cfg, policy)[:, -1]
             if cfg.early_exit is not None and kind == "decode":
                 from repro.core.early_exit import merge_exit_logits
                 exit_lg = tuple(
-                    lm._exit_logits(hp, x, i, cfg, accel)[:, -1]
+                    lm._exit_logits(hp, x, i, cfg, policy)[:, -1]
                     for i in range(len(cfg.early_exit.exit_layers)))
                 logits, _, _ = merge_exit_logits(logits, exit_lg,
                                                  cfg.early_exit)
@@ -390,7 +390,7 @@ def component_costs(run: RunConfig, ctx) -> Dict[str, Any]:
 
             def pfx_step(p, x, st, pos):
                 y, _, ns = lm._apply_layer(p, x, cfg.layer_spec(0), cfg,
-                                           accel, state=st, mode=mode,
+                                           policy, state=st, mode=mode,
                                            cache_pos=pos)
                 return y, ns
 

@@ -10,17 +10,26 @@ decode throughput plus per-request latency percentiles (p50/p99):
 
 ``--rate 0`` disables arrival pacing (closed-loop: every request is ready
 at t=0 — the pure-throughput configuration the benchmarks use).
+
+Backend selection: by default the static all-"ref" AccelConfig. Pass
+``--policy PATH`` to serve under a persisted shape-aware DispatchPolicy
+(produced by ``repro.core.autotune``), or ``--autotune`` to run the
+measured sweep at startup (persisting to ``--policy``'s path, default
+``.xaif_policy.json``, so the next launch skips the measurement).
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 
 import jax
 import numpy as np
 
 from repro.configs.base import (AccelConfig, RunConfig, SHAPES_BY_NAME,
                                 get_arch, list_archs)
+from repro.core import autotune as autotune_mod
+from repro.core import xaif
 from repro.models import lm
 from repro.serve.engine import SlotEngine
 from repro.serve.scheduler import poisson_requests, serve
@@ -42,14 +51,31 @@ def main():
     ap.add_argument("--threshold", type=float, default=None)
     ap.add_argument("--gated", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policy", default=autotune_mod.DEFAULT_POLICY_PATH,
+                    help="path to a persisted DispatchPolicy JSON")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the measured backend sweep at startup and "
+                         "persist the winning policy to --policy")
     args = ap.parse_args()
+
+    if args.autotune:
+        print(f"autotuning XAIF backends -> {args.policy}")
+        result = autotune_mod.autotune(iters=2, print_fn=print)
+        result.persist(args.policy)
+        policy = result.policy
+    elif os.path.exists(args.policy):
+        policy = xaif.DispatchPolicy.load(args.policy)
+        print(f"loaded dispatch policy from {args.policy} "
+              f"({len(policy.rules)} rules)")
+    else:
+        policy = AccelConfig()
 
     cfg = get_arch(args.arch).reduced()
     if args.threshold is not None and cfg.early_exit is not None:
         cfg = dataclasses.replace(cfg, early_exit=dataclasses.replace(
             cfg.early_exit, entropy_threshold=args.threshold))
     run = RunConfig(arch=cfg, shape=SHAPES_BY_NAME["decode_32k"],
-                    accel=AccelConfig())
+                    accel=policy)
     params = lm.init_lm(jax.random.PRNGKey(0), cfg)
     gated = args.gated and all(b.mixer == "attn" for b in cfg.block_pattern)
 

@@ -19,7 +19,7 @@ from typing import Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import AccelConfig, ArchConfig
+from repro.configs.base import ArchConfig
 from repro.core import xaif
 from repro.models.layers import apply_rope, dense_init, init_rmsnorm, rope_dims
 
@@ -95,20 +95,20 @@ def init_attention(key, cfg: ArchConfig, dtype) -> Dict:
     return p
 
 
-def _project_qkv(params, x, cfg: ArchConfig, accel: AccelConfig,
+def _project_qkv(params, x, cfg: ArchConfig, policy: xaif.PolicyLike,
                  positions: jax.Array):
     b, t, d = x.shape
     hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    q = xaif.call("gemm", accel, x, params["wq"], bias=params.get("bq"))
-    k = xaif.call("gemm", accel, x, params["wk"], bias=params.get("bk"))
-    v = xaif.call("gemm", accel, x, params["wv"], bias=params.get("bv"))
+    q = xaif.call("gemm", policy, x, params["wq"], bias=params.get("bq"))
+    k = xaif.call("gemm", policy, x, params["wk"], bias=params.get("bk"))
+    v = xaif.call("gemm", policy, x, params["wv"], bias=params.get("bv"))
     q = q.reshape(b, t, hq, dh).transpose(0, 2, 1, 3)     # [B, Hq, T, D]
     k = k.reshape(b, t, hkv, dh).transpose(0, 2, 1, 3)
     v = v.reshape(b, t, hkv, dh).transpose(0, 2, 1, 3)
     if cfg.qk_norm:
         from repro.models.layers import rmsnorm
-        q = rmsnorm(params["q_norm"], q, accel, cfg.norm_eps)
-        k = rmsnorm(params["k_norm"], k, accel, cfg.norm_eps)
+        q = rmsnorm(params["q_norm"], q, policy, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, policy, cfg.norm_eps)
     rd = rope_dims(cfg)
     if rd != 0:
         q = apply_rope(q, positions, cfg.rope_theta, rd)
@@ -116,34 +116,34 @@ def _project_qkv(params, x, cfg: ArchConfig, accel: AccelConfig,
     return q, k, v
 
 
-def apply_attention(params, x, cfg: ArchConfig, accel: AccelConfig,
+def apply_attention(params, x, cfg: ArchConfig, policy: xaif.PolicyLike,
                     positions: Optional[jax.Array] = None) -> jax.Array:
     """Full-sequence causal path (train / prefill). x [B, T, d]."""
     b, t, _ = x.shape
     if positions is None:
         positions = jnp.arange(t)
-    q, k, v = _project_qkv(params, x, cfg, accel, positions)
-    out = xaif.call("attention", accel, q, k, v, causal=True)
+    q, k, v = _project_qkv(params, x, cfg, policy, positions)
+    out = xaif.call("attention", policy, q, k, v, causal=True)
     out = out.transpose(0, 2, 1, 3).reshape(b, t, cfg.num_heads * cfg.head_dim)
-    return xaif.call("gemm", accel, out, params["wo"])
+    return xaif.call("gemm", policy, out, params["wo"])
 
 
-def apply_attention_prefill(params, x, cfg, accel, cache: KVCache
+def apply_attention_prefill(params, x, cfg, policy, cache: KVCache
                             ) -> Tuple[jax.Array, KVCache]:
     """Prefill: as train, but also writes the produced K/V into the cache."""
     b, t, _ = x.shape
     positions = jnp.arange(t)
-    q, k, v = _project_qkv(params, x, cfg, accel, positions)
-    out = xaif.call("attention", accel, q, k, v, causal=True)
+    q, k, v = _project_qkv(params, x, cfg, policy, positions)
+    out = xaif.call("attention", policy, q, k, v, causal=True)
     out = out.transpose(0, 2, 1, 3).reshape(b, t, cfg.num_heads * cfg.head_dim)
     new_cache = KVCache(
         jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0)),
         jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0)),
     )
-    return xaif.call("gemm", accel, out, params["wo"]), new_cache
+    return xaif.call("gemm", policy, out, params["wo"]), new_cache
 
 
-def apply_attention_decode(params, x, cfg: ArchConfig, accel: AccelConfig,
+def apply_attention_decode(params, x, cfg: ArchConfig, policy: xaif.PolicyLike,
                            cache: KVCache, cache_pos: jax.Array
                            ) -> Tuple[jax.Array, KVCache]:
     """One-token decode. x [B, 1, d]; cache_pos [B] = current length (the new
@@ -151,7 +151,7 @@ def apply_attention_decode(params, x, cfg: ArchConfig, accel: AccelConfig,
     b = x.shape[0]
     hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     g = hq // hkv
-    q, k, v = _project_qkv(params, x, cfg, accel, cache_pos[:, None])
+    q, k, v = _project_qkv(params, x, cfg, policy, cache_pos[:, None])
     # write the new K/V at each sequence's position
     bidx = jnp.arange(b)
     ck = cache.k.at[bidx, :, cache_pos, :].set(k[:, :, 0, :].astype(cache.k.dtype))
@@ -170,7 +170,7 @@ def apply_attention_decode(params, x, cfg: ArchConfig, accel: AccelConfig,
     out = jnp.einsum("bhgs,bhsd->bhgd", p.astype(cv.dtype), cv,
                      preferred_element_type=jnp.float32)
     out = out.reshape(b, 1, hq * dh).astype(x.dtype)
-    return xaif.call("gemm", accel, out, params["wo"]), KVCache(ck, cv)
+    return xaif.call("gemm", policy, out, params["wo"]), KVCache(ck, cv)
 
 
 # ---------------------------------------------------------------------------
@@ -198,30 +198,30 @@ def init_mla(key, cfg: ArchConfig, dtype) -> Dict:
     return p
 
 
-def _mla_latent(params, x, cfg, accel, positions):
+def _mla_latent(params, x, cfg, policy, positions):
     """Shared first stage: compressed latent + rotary key."""
     from repro.models.layers import rmsnorm
     m = cfg.mla
-    c_kv = xaif.call("gemm", accel, x, params["w_dkv"])
-    c_kv = rmsnorm(params["kv_norm"], c_kv, accel, cfg.norm_eps)
-    k_rope = xaif.call("gemm", accel, x, params["w_kr"])   # [B, T, rd]
+    c_kv = xaif.call("gemm", policy, x, params["w_dkv"])
+    c_kv = rmsnorm(params["kv_norm"], c_kv, policy, cfg.norm_eps)
+    k_rope = xaif.call("gemm", policy, x, params["w_kr"])   # [B, T, rd]
     k_rope = apply_rope(k_rope[:, None], positions, cfg.rope_theta)[:, 0]
     return c_kv, k_rope
 
 
-def _mla_queries(params, x, cfg, accel, positions):
+def _mla_queries(params, x, cfg, policy, positions):
     m = cfg.mla
     b, t, _ = x.shape
     h = cfg.num_heads
     dqk = m.qk_nope_head_dim + m.qk_rope_head_dim
-    q = xaif.call("gemm", accel, x, params["wq"])
+    q = xaif.call("gemm", policy, x, params["wq"])
     q = q.reshape(b, t, h, dqk).transpose(0, 2, 1, 3)      # [B, H, T, dqk]
     q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
     return q_nope, q_rope
 
 
-def apply_mla(params, x, cfg: ArchConfig, accel: AccelConfig,
+def apply_mla(params, x, cfg: ArchConfig, policy: xaif.PolicyLike,
               positions: Optional[jax.Array] = None,
               cache: Optional[MLACache] = None
               ) -> Tuple[jax.Array, Optional[MLACache]]:
@@ -231,12 +231,12 @@ def apply_mla(params, x, cfg: ArchConfig, accel: AccelConfig,
     h = cfg.num_heads
     if positions is None:
         positions = jnp.arange(t)
-    c_kv, k_rope = _mla_latent(params, x, cfg, accel, positions)
-    q_nope, q_rope = _mla_queries(params, x, cfg, accel, positions)
+    c_kv, k_rope = _mla_latent(params, x, cfg, policy, positions)
+    q_nope, q_rope = _mla_queries(params, x, cfg, policy, positions)
     # decompress keys/values: [B, T, H, dn] / [B, T, H, dv]
-    k_nope = xaif.call("gemm", accel, c_kv, params["w_uk"]).reshape(
+    k_nope = xaif.call("gemm", policy, c_kv, params["w_uk"]).reshape(
         b, t, h, m.qk_nope_head_dim).transpose(0, 2, 1, 3)
-    v = xaif.call("gemm", accel, c_kv, params["w_uv"]).reshape(
+    v = xaif.call("gemm", policy, c_kv, params["w_uv"]).reshape(
         b, t, h, m.v_head_dim).transpose(0, 2, 1, 3)
     # assemble full q/k with the shared rotary part broadcast over heads
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
@@ -244,7 +244,7 @@ def apply_mla(params, x, cfg: ArchConfig, accel: AccelConfig,
         [k_nope, jnp.broadcast_to(k_rope[:, None], (b, h, t, m.qk_rope_head_dim))],
         axis=-1)
     scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
-    out = xaif.call("attention", accel, q, k, v.astype(q.dtype), causal=True,
+    out = xaif.call("attention", policy, q, k, v.astype(q.dtype), causal=True,
                     scale=scale)
     out = out.transpose(0, 2, 1, 3).reshape(b, t, h * m.v_head_dim)
     new_cache = None
@@ -255,10 +255,10 @@ def apply_mla(params, x, cfg: ArchConfig, accel: AccelConfig,
             jax.lax.dynamic_update_slice(
                 cache.k_rope, k_rope.astype(cache.k_rope.dtype), (0, 0, 0)),
         )
-    return xaif.call("gemm", accel, out, params["wo"]), new_cache
+    return xaif.call("gemm", policy, out, params["wo"]), new_cache
 
 
-def apply_mla_decode(params, x, cfg: ArchConfig, accel: AccelConfig,
+def apply_mla_decode(params, x, cfg: ArchConfig, policy: xaif.PolicyLike,
                      cache: MLACache, cache_pos: jax.Array
                      ) -> Tuple[jax.Array, MLACache]:
     """Absorbed-matrix decode: attend the compressed latent directly.
@@ -271,8 +271,8 @@ def apply_mla_decode(params, x, cfg: ArchConfig, accel: AccelConfig,
     b = x.shape[0]
     h = cfg.num_heads
     positions = cache_pos[:, None]
-    c_new, kr_new = _mla_latent(params, x, cfg, accel, positions)
-    q_nope, q_rope = _mla_queries(params, x, cfg, accel, positions)
+    c_new, kr_new = _mla_latent(params, x, cfg, policy, positions)
+    q_nope, q_rope = _mla_queries(params, x, cfg, policy, positions)
     bidx = jnp.arange(b)
     c_kv = cache.c_kv.at[bidx, cache_pos, :].set(c_new[:, 0].astype(cache.c_kv.dtype))
     k_rope = cache.k_rope.at[bidx, cache_pos, :].set(kr_new[:, 0].astype(cache.k_rope.dtype))
@@ -294,5 +294,5 @@ def apply_mla_decode(params, x, cfg: ArchConfig, accel: AccelConfig,
     w_uv = params["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
     out = jnp.einsum("bhl,lhd->bhd", pooled, w_uv.astype(jnp.float32))
     out = out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
-    return (xaif.call("gemm", accel, out, params["wo"]),
+    return (xaif.call("gemm", policy, out, params["wo"]),
             MLACache(c_kv, k_rope))

@@ -17,7 +17,7 @@ from typing import Dict, List, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import AccelConfig, EarlyExitConfig
+from repro.configs.base import EarlyExitConfig
 from repro.core import xaif
 from repro.core.energy import StageCost
 from repro.models.layers import dense_init
@@ -91,7 +91,7 @@ def init_cnn(key, cfg: SeizureCNNConfig) -> Dict:
     }
 
 
-def forward_cnn(params, x, cfg: SeizureCNNConfig, accel: AccelConfig
+def forward_cnn(params, x, cfg: SeizureCNNConfig, policy: xaif.PolicyLike
                 ) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
     """x [B, T, C] -> (final_logits [B, 2], (exit_logits [B, 2],))."""
     exit_after = cfg.early_exit.exit_layers[0]
@@ -104,10 +104,10 @@ def forward_cnn(params, x, cfg: SeizureCNNConfig, accel: AccelConfig
                     axis=2)
         if i + 1 == exit_after:
             g = jnp.mean(x, axis=1)                       # GAP
-            exit_logits = xaif.call("gemm", accel, g, params["exit_head"]["w"],
+            exit_logits = xaif.call("gemm", policy, g, params["exit_head"]["w"],
                                     bias=params["exit_head"]["b"])
     g = jnp.mean(x, axis=1)
-    logits = xaif.call("gemm", accel, g, params["head"]["w"],
+    logits = xaif.call("gemm", policy, g, params["head"]["w"],
                        bias=params["head"]["b"])
     return logits, (exit_logits,)
 
@@ -169,7 +169,7 @@ def init_transformer(key, cfg: SeizureTransformerConfig) -> Dict:
     }
 
 
-def _encoder_layer(p, x, cfg, accel):
+def _encoder_layer(p, x, cfg, policy):
     from repro.kernels.rmsnorm.ref import rmsnorm_ref
     h = rmsnorm_ref(x, p["ln1"])
     b, t, d = x.shape
@@ -178,7 +178,7 @@ def _encoder_layer(p, x, cfg, accel):
     q = (h @ p["wq"]).reshape(b, t, nh, dh).transpose(0, 2, 1, 3)
     k = (h @ p["wk"]).reshape(b, t, nh, dh).transpose(0, 2, 1, 3)
     v = (h @ p["wv"]).reshape(b, t, nh, dh).transpose(0, 2, 1, 3)
-    out = xaif.call("attention", accel, q, k, v, causal=False)
+    out = xaif.call("attention", policy, q, k, v, causal=False)
     out = out.transpose(0, 2, 1, 3).reshape(b, t, d)
     x = x + out @ p["wo"]
     h2 = rmsnorm_ref(x, p["ln2"])
@@ -187,7 +187,7 @@ def _encoder_layer(p, x, cfg, accel):
 
 
 def forward_transformer(params, x, cfg: SeizureTransformerConfig,
-                        accel: AccelConfig):
+                        policy: xaif.PolicyLike):
     """x [B, T, C] -> (final_logits, (exit_logits,))."""
     b = x.shape[0]
     n_tok = cfg.window // cfg.patch
@@ -196,13 +196,13 @@ def forward_transformer(params, x, cfg: SeizureTransformerConfig,
     exit_after = cfg.early_exit.exit_layers[0]
     exit_logits = None
     for i, layer in enumerate(params["layers"]):
-        h = _encoder_layer(layer, h, cfg, accel)
+        h = _encoder_layer(layer, h, cfg, policy)
         if i + 1 == exit_after:
             g = jnp.mean(h, axis=1)
-            exit_logits = xaif.call("gemm", accel, g, params["exit_head"]["w"],
+            exit_logits = xaif.call("gemm", policy, g, params["exit_head"]["w"],
                                     bias=params["exit_head"]["b"])
     g = jnp.mean(h, axis=1)
-    logits = xaif.call("gemm", accel, g, params["head"]["w"],
+    logits = xaif.call("gemm", policy, g, params["head"]["w"],
                        bias=params["head"]["b"])
     return logits, (exit_logits,)
 

@@ -11,7 +11,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import AccelConfig, ArchConfig
+from repro.configs.base import ArchConfig
 from repro.core import xaif
 
 # ---------------------------------------------------------------------------
@@ -66,8 +66,8 @@ def init_rmsnorm(d: int) -> Dict[str, jax.Array]:
     return {"scale": jnp.ones((d,), jnp.float32)}
 
 
-def rmsnorm(params, x, accel: AccelConfig, eps: float = 1e-5):
-    return xaif.call("rmsnorm", accel, x, params["scale"], eps=eps)
+def rmsnorm(params, x, policy: xaif.PolicyLike, eps: float = 1e-5):
+    return xaif.call("rmsnorm", policy, x, params["scale"], eps=eps)
 
 
 # ---------------------------------------------------------------------------
@@ -127,10 +127,10 @@ def init_mlp(key, d_model: int, d_ff: int, dtype) -> Dict[str, jax.Array]:
     }
 
 
-def apply_mlp(params, x, accel: AccelConfig):
-    g = xaif.call("gemm", accel, x, params["w_gate"], activation="silu")
-    u = xaif.call("gemm", accel, x, params["w_up"])
-    return xaif.call("gemm", accel, (g * u).astype(x.dtype), params["w_down"])
+def apply_mlp(params, x, policy: xaif.PolicyLike):
+    g = xaif.call("gemm", policy, x, params["w_gate"], activation="silu")
+    u = xaif.call("gemm", policy, x, params["w_up"])
+    return xaif.call("gemm", policy, (g * u).astype(x.dtype), params["w_down"])
 
 
 # ---------------------------------------------------------------------------

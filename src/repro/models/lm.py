@@ -26,7 +26,7 @@ from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import AccelConfig, ArchConfig, BlockSpec
+from repro.configs.base import ArchConfig, BlockSpec
 from repro.core import xaif
 from repro.core.early_exit import apply_exit_head, init_exit_head
 from repro.dist.sharding import constrain
@@ -63,51 +63,51 @@ def _init_layer(key, spec: BlockSpec, cfg: ArchConfig, dtype) -> Dict:
     return p
 
 
-def _apply_layer(p, x, spec: BlockSpec, cfg: ArchConfig, accel: AccelConfig,
+def _apply_layer(p, x, spec: BlockSpec, cfg: ArchConfig, policy: xaif.PolicyLike,
                  state=None, mode: str = "train", cache_pos=None):
     """Returns (x, aux_loss, new_state)."""
-    h = rmsnorm(p["ln1"], x, accel, cfg.norm_eps)
+    h = rmsnorm(p["ln1"], x, policy, cfg.norm_eps)
     new_state = None
     if spec.mixer == "attn":
         if cfg.mla is not None:
             if mode == "decode":
                 out, new_state = attn.apply_mla_decode(p["mixer"], h, cfg,
-                                                       accel, state, cache_pos)
+                                                       policy, state, cache_pos)
             else:
-                out, new_state = attn.apply_mla(p["mixer"], h, cfg, accel,
+                out, new_state = attn.apply_mla(p["mixer"], h, cfg, policy,
                                                 cache=state)
         else:
             if mode == "decode":
                 out, new_state = attn.apply_attention_decode(
-                    p["mixer"], h, cfg, accel, state, cache_pos)
+                    p["mixer"], h, cfg, policy, state, cache_pos)
             elif mode == "prefill":
                 out, new_state = attn.apply_attention_prefill(
-                    p["mixer"], h, cfg, accel, state)
+                    p["mixer"], h, cfg, policy, state)
             else:
-                out = attn.apply_attention(p["mixer"], h, cfg, accel)
+                out = attn.apply_attention(p["mixer"], h, cfg, policy)
     elif spec.mixer == "mamba":
         fn = (mamba_mod.apply_mamba_decode if mode == "decode"
               else mamba_mod.apply_mamba)
-        out, new_state = fn(p["mixer"], h, cfg, accel, state)
+        out, new_state = fn(p["mixer"], h, cfg, policy, state)
     elif spec.mixer == "mlstm":
         fn = (xlstm_mod.apply_mlstm_decode if mode == "decode"
               else xlstm_mod.apply_mlstm)
-        out, new_state = fn(p["mixer"], h, cfg, accel, state)
+        out, new_state = fn(p["mixer"], h, cfg, policy, state)
     elif spec.mixer == "slstm":
         fn = (xlstm_mod.apply_slstm_decode if mode == "decode"
               else xlstm_mod.apply_slstm)
-        out, new_state = fn(p["mixer"], h, cfg, accel, state)
+        out, new_state = fn(p["mixer"], h, cfg, policy, state)
     else:
         raise ValueError(spec.mixer)
     x = x + out
     aux = jnp.zeros((), jnp.float32)
     if spec.ffn != "none":
-        h2 = rmsnorm(p["ln2"], x, accel, cfg.norm_eps)
+        h2 = rmsnorm(p["ln2"], x, policy, cfg.norm_eps)
         if spec.ffn == "moe":
             groups = 1 if h2.shape[1] == 1 else None
-            out2, aux = moe_mod.apply_moe(p["ffn"], h2, cfg, accel, groups)
+            out2, aux = moe_mod.apply_moe(p["ffn"], h2, cfg, policy, groups)
         else:
-            out2 = apply_mlp(p["ffn"], h2, accel)
+            out2 = apply_mlp(p["ffn"], h2, policy)
         x = x + out2
     # residual stream: batch over data axes, sequence-parallel over the
     # model axis when enabled (shards the saved scan carries — the remat
@@ -192,7 +192,7 @@ def _remat_wrap(fn, remat: str):
     return fn
 
 
-def _scan_segment(slots, x, sb_start, sb_end, cfg, accel, remat="nothing",
+def _scan_segment(slots, x, sb_start, sb_end, cfg, policy, remat="nothing",
                   mode="train", states=None, cache_pos=None):
     """Run super-blocks [sb_start, sb_end). Returns (x, aux, new_states)."""
     if sb_end == sb_start:
@@ -211,7 +211,7 @@ def _scan_segment(slots, x, sb_start, sb_end, cfg, accel, remat="nothing",
         new_states = []
         for j, spec in enumerate(cfg.block_pattern):
             st = slot_states[j] if has_state else None
-            x, a, ns = _apply_layer(slot_params[j], x, spec, cfg, accel,
+            x, a, ns = _apply_layer(slot_params[j], x, spec, cfg, policy,
                                     state=st, mode=mode, cache_pos=cache_pos)
             aux = aux + a
             new_states.append(ns)
@@ -238,15 +238,15 @@ def _embed(params, inputs, cfg: ArchConfig):
     return constrain(x, "batch", None, None)
 
 
-def _head(params, x, cfg: ArchConfig, accel: AccelConfig):
-    h = rmsnorm(params["final_norm"], x, accel, cfg.norm_eps)
-    logits = xaif.call("gemm", accel, h, params["unembed"])
+def _head(params, x, cfg: ArchConfig, policy: xaif.PolicyLike):
+    h = rmsnorm(params["final_norm"], x, policy, cfg.norm_eps)
+    logits = xaif.call("gemm", policy, h, params["unembed"])
     return constrain(logits, "batch", None, "tp")
 
 
-def _exit_logits(params, x, i, cfg, accel):
+def _exit_logits(params, x, i, cfg, policy):
     return constrain(
-        apply_exit_head(params["exits"][i], x, params["unembed"], accel,
+        apply_exit_head(params["exits"][i], x, params["unembed"], policy,
                         cfg.norm_eps),
         "batch", None, "tp")
 
@@ -256,7 +256,7 @@ def _exit_logits(params, x, i, cfg, accel):
 # ---------------------------------------------------------------------------
 
 
-def forward_train(params, inputs, cfg: ArchConfig, accel: AccelConfig,
+def forward_train(params, inputs, cfg: ArchConfig, policy: xaif.PolicyLike,
                   remat: str = "nothing"):
     """-> (final_logits, exit_logits tuple, aux dict)."""
     x = _embed(params, inputs, cfg)
@@ -267,21 +267,21 @@ def forward_train(params, inputs, cfg: ArchConfig, accel: AccelConfig,
         exit_points = {el: i for i, el in enumerate(cfg.early_exit.exit_layers)}
     for i in range(cfg.first_k_dense):
         x, a, _ = _apply_layer(params["prefix"][i], x, cfg.layer_spec(i), cfg,
-                               accel, mode="train")
+                               policy, mode="train")
         aux_total = aux_total + a
         if (i + 1) in exit_points:
-            exit_lg.append(_exit_logits(params, x, exit_points[i + 1], cfg, accel))
+            exit_lg.append(_exit_logits(params, x, exit_points[i + 1], cfg, policy))
     for sb_start, sb_end, exit_i in _segments(cfg):
         x, a, _ = _scan_segment(params["slots"], x, sb_start, sb_end, cfg,
-                                accel, remat, mode="train")
+                                policy, remat, mode="train")
         aux_total = aux_total + a
         if exit_i is not None:
-            exit_lg.append(_exit_logits(params, x, exit_i, cfg, accel))
-    logits = _head(params, x, cfg, accel)
+            exit_lg.append(_exit_logits(params, x, exit_i, cfg, policy))
+    logits = _head(params, x, cfg, policy)
     return logits, tuple(exit_lg), {"aux_loss": aux_total}
 
 
-def forward_train_hidden(params, inputs, cfg: ArchConfig, accel: AccelConfig,
+def forward_train_hidden(params, inputs, cfg: ArchConfig, policy: xaif.PolicyLike,
                          remat: str = "nothing"):
     """Like forward_train but returns the PRE-HEAD hidden states instead of
     logits: (x [B,T,d], exit_hiddens tuple, aux). Used by the chunked
@@ -295,13 +295,13 @@ def forward_train_hidden(params, inputs, cfg: ArchConfig, accel: AccelConfig,
         exit_points = {el: i for i, el in enumerate(cfg.early_exit.exit_layers)}
     for i in range(cfg.first_k_dense):
         x, a, _ = _apply_layer(params["prefix"][i], x, cfg.layer_spec(i), cfg,
-                               accel, mode="train")
+                               policy, mode="train")
         aux_total = aux_total + a
         if (i + 1) in exit_points:
             exit_hidden.append(x)
     for sb_start, sb_end, exit_i in _segments(cfg):
         x, a, _ = _scan_segment(params["slots"], x, sb_start, sb_end, cfg,
-                                accel, remat, mode="train")
+                                policy, remat, mode="train")
         aux_total = aux_total + a
         if exit_i is not None:
             exit_hidden.append(x)
@@ -405,7 +405,7 @@ def slot_lengths(cache: LMCache) -> jax.Array:
     return cache.pos
 
 
-def forward_prefill(params, inputs, cfg: ArchConfig, accel: AccelConfig,
+def forward_prefill(params, inputs, cfg: ArchConfig, policy: xaif.PolicyLike,
                     cache: LMCache, lengths: Optional[jax.Array] = None):
     """Full-sequence prefill filling caches; returns (last_logits, cache).
 
@@ -420,10 +420,10 @@ def forward_prefill(params, inputs, cfg: ArchConfig, accel: AccelConfig,
     new_prefix = []
     for i in range(cfg.first_k_dense):
         x, _, ns = _apply_layer(params["prefix"][i], x, cfg.layer_spec(i), cfg,
-                                accel, state=cache.prefix[i], mode="prefill")
+                                policy, state=cache.prefix[i], mode="prefill")
         new_prefix.append(ns)
     x, _, new_slots = _scan_segment(params["slots"], x, 0,
-                                    cfg.num_superblocks, cfg, accel,
+                                    cfg.num_superblocks, cfg, policy,
                                     mode="prefill", states=cache.slots)
     if lengths is None:
         last = x[:, -1:, :]
@@ -432,11 +432,11 @@ def forward_prefill(params, inputs, cfg: ArchConfig, accel: AccelConfig,
         last = jnp.take_along_axis(
             x, (lengths - 1).astype(jnp.int32)[:, None, None], axis=1)
         pos = lengths.astype(jnp.int32)
-    logits = _head(params, last, cfg, accel)
+    logits = _head(params, last, cfg, policy)
     return logits[:, 0], LMCache(tuple(new_prefix), tuple(new_slots), pos)
 
 
-def forward_decode(params, tokens, cfg: ArchConfig, accel: AccelConfig,
+def forward_decode(params, tokens, cfg: ArchConfig, policy: xaif.PolicyLike,
                    cache: LMCache, with_exits: bool = True):
     """One decode step. tokens [B, 1] (or [B, 1, d] embeddings).
 
@@ -451,16 +451,16 @@ def forward_decode(params, tokens, cfg: ArchConfig, accel: AccelConfig,
     new_prefix = []
     for i in range(cfg.first_k_dense):
         x, _, ns = _apply_layer(params["prefix"][i], x, cfg.layer_spec(i), cfg,
-                                accel, state=cache.prefix[i], mode="decode",
+                                policy, state=cache.prefix[i], mode="decode",
                                 cache_pos=cache_pos)
         new_prefix.append(ns)
         if (i + 1) in exit_points:
             exit_lg.append(_exit_logits(params, x, exit_points[i + 1], cfg,
-                                        accel)[:, 0])
+                                        policy)[:, 0])
     new_slots = cache.slots
     for sb_start, sb_end, exit_i in _segments(cfg):
         x, _, seg_states = _scan_segment(
-            params["slots"], x, sb_start, sb_end, cfg, accel, mode="decode",
+            params["slots"], x, sb_start, sb_end, cfg, policy, mode="decode",
             states=cache.slots, cache_pos=cache_pos)
         if sb_end > sb_start:
             new_slots = jax.tree_util.tree_map(
@@ -468,22 +468,22 @@ def forward_decode(params, tokens, cfg: ArchConfig, accel: AccelConfig,
                     full, seg.astype(full.dtype), sb_start, axis=0),
                 new_slots, seg_states)
         if exit_i is not None and (with_exits and cfg.early_exit is not None):
-            exit_lg.append(_exit_logits(params, x, exit_i, cfg, accel)[:, 0])
-    logits = _head(params, x, cfg, accel)[:, 0]
+            exit_lg.append(_exit_logits(params, x, exit_i, cfg, policy)[:, 0])
+    logits = _head(params, x, cfg, policy)[:, 0]
     new_cache = LMCache(tuple(new_prefix), new_slots, cache.pos + 1)
     return logits, tuple(exit_lg), new_cache
 
 
-def _kv_propagate_layer(p, x_exit, cfg: ArchConfig, accel, state, cache_pos):
+def _kv_propagate_layer(p, x_exit, cfg: ArchConfig, policy, state, cache_pos):
     """CALM state propagation: fill a skipped attention layer's KV cache from
     the exit hidden state (wk/wv or latent projections only — no scores, no
     values-weighted sum, no FFN). This is the decode-side power gating
     (DESIGN.md C3): ~2 of ~8 GEMMs per skipped layer."""
     b = x_exit.shape[0]
-    h = rmsnorm(p["ln1"], x_exit, accel, cfg.norm_eps)
+    h = rmsnorm(p["ln1"], x_exit, policy, cfg.norm_eps)
     bidx = jnp.arange(b)
     if cfg.mla is not None:
-        c_new, kr_new = attn._mla_latent(p["mixer"], h, cfg, accel,
+        c_new, kr_new = attn._mla_latent(p["mixer"], h, cfg, policy,
                                          cache_pos[:, None])
         return attn.MLACache(
             state.c_kv.at[bidx, cache_pos, :].set(
@@ -492,12 +492,12 @@ def _kv_propagate_layer(p, x_exit, cfg: ArchConfig, accel, state, cache_pos):
                 kr_new[:, 0].astype(state.k_rope.dtype)))
     hkv, dh = cfg.num_kv_heads, cfg.head_dim
     mp = p["mixer"]
-    k = xaif.call("gemm", accel, h, mp["wk"], bias=mp.get("bk"))
-    v = xaif.call("gemm", accel, h, mp["wv"], bias=mp.get("bv"))
+    k = xaif.call("gemm", policy, h, mp["wk"], bias=mp.get("bk"))
+    v = xaif.call("gemm", policy, h, mp["wv"], bias=mp.get("bv"))
     k = k.reshape(b, 1, hkv, dh).transpose(0, 2, 1, 3)
     v = v.reshape(b, 1, hkv, dh).transpose(0, 2, 1, 3)
     if cfg.qk_norm:
-        k = rmsnorm(mp["k_norm"], k, accel, cfg.norm_eps)
+        k = rmsnorm(mp["k_norm"], k, policy, cfg.norm_eps)
     from repro.models.layers import apply_rope, rope_dims
     rd = rope_dims(cfg)
     if rd != 0:
@@ -507,7 +507,7 @@ def _kv_propagate_layer(p, x_exit, cfg: ArchConfig, accel, state, cache_pos):
         state.v.at[bidx, :, cache_pos, :].set(v[:, :, 0, :].astype(state.v.dtype)))
 
 
-def forward_decode_gated(params, tokens, cfg: ArchConfig, accel: AccelConfig,
+def forward_decode_gated(params, tokens, cfg: ArchConfig, policy: xaif.PolicyLike,
                          cache: LMCache, live: Optional[jax.Array] = None):
     """Early-exit decode with REAL compute gating (attention-only archs).
 
@@ -533,25 +533,25 @@ def forward_decode_gated(params, tokens, cfg: ArchConfig, accel: AccelConfig,
     new_prefix = []
     for i in range(cfg.first_k_dense):
         x, _, ns = _apply_layer(params["prefix"][i], x, cfg.layer_spec(i), cfg,
-                                accel, state=cache.prefix[i], mode="decode",
+                                policy, state=cache.prefix[i], mode="decode",
                                 cache_pos=cache_pos)
         new_prefix.append(ns)
     exit_sb = (cfg.early_exit.exit_layers[0] - cfg.first_k_dense) // cfg.period
     n_sb = cfg.num_superblocks
     # segment 1: up to the exit head
     x, _, pre_states = _scan_segment(params["slots"], x, 0, exit_sb, cfg,
-                                     accel, mode="decode", states=cache.slots,
+                                     policy, mode="decode", states=cache.slots,
                                      cache_pos=cache_pos)
-    exit_lg = _exit_logits(params, x, 0, cfg, accel)[:, 0]
-    exit_mask, _ = should_exit(exit_lg, cfg.early_exit.entropy_threshold, accel)
+    exit_lg = _exit_logits(params, x, 0, cfg, policy)[:, 0]
+    exit_mask, _ = should_exit(exit_lg, cfg.early_exit.entropy_threshold, policy)
     gate = exit_mask if live is None else (exit_mask | ~live)
     rest = jax.tree_util.tree_map(lambda a: a[exit_sb:n_sb], cache.slots)
 
     def cont(ops):
         x_in, rest_states = ops
         x2, _, new_rest = _scan_segment_pre(rest_states, params, x_in, exit_sb,
-                                            n_sb, cfg, accel, cache_pos)
-        lg = _head(params, x2, cfg, accel)[:, 0]
+                                            n_sb, cfg, policy, cache_pos)
+        lg = _head(params, x2, cfg, policy)[:, 0]
         lg = jnp.where(exit_mask[:, None], exit_lg, lg)
         return lg, new_rest
 
@@ -561,7 +561,7 @@ def forward_decode_gated(params, tokens, cfg: ArchConfig, accel: AccelConfig,
         def body(carry, xs_i):
             slot_params, slot_states = xs_i
             new_states = tuple(
-                _kv_propagate_layer(slot_params[j], carry, cfg, accel,
+                _kv_propagate_layer(slot_params[j], carry, cfg, policy,
                                     slot_states[j], cache_pos)
                 for j in range(cfg.period))
             return carry, new_states
@@ -579,7 +579,7 @@ def forward_decode_gated(params, tokens, cfg: ArchConfig, accel: AccelConfig,
                                       cache.pos + 1)
 
 
-def _scan_segment_pre(states_sliced, params, x, sb_start, sb_end, cfg, accel,
+def _scan_segment_pre(states_sliced, params, x, sb_start, sb_end, cfg, policy,
                       cache_pos):
     """Like _scan_segment(mode=decode) but takes pre-sliced states."""
     sliced = jax.tree_util.tree_map(
@@ -590,7 +590,7 @@ def _scan_segment_pre(states_sliced, params, x, sb_start, sb_end, cfg, accel,
         slot_params, slot_states = xs_i
         new_states = []
         for j, spec in enumerate(cfg.block_pattern):
-            x, a, ns = _apply_layer(slot_params[j], x, spec, cfg, accel,
+            x, a, ns = _apply_layer(slot_params[j], x, spec, cfg, policy,
                                     state=slot_states[j], mode="decode",
                                     cache_pos=cache_pos)
             aux = aux + a

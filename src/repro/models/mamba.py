@@ -12,7 +12,7 @@ from typing import Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import AccelConfig, ArchConfig
+from repro.configs.base import ArchConfig
 from repro.core import xaif
 from repro.models.layers import apply_conv1d, dense_init, init_conv1d
 
@@ -91,11 +91,11 @@ def _split_xdbc(params, xc, cfg):
     return dt, b, c
 
 
-def apply_mamba(params, x: jax.Array, cfg: ArchConfig, accel: AccelConfig,
+def apply_mamba(params, x: jax.Array, cfg: ArchConfig, policy: xaif.PolicyLike,
                 state: Optional[MambaState] = None
                 ) -> Tuple[jax.Array, Optional[MambaState]]:
     """Full-sequence path. x [B, T, d] -> (y, final state if requested)."""
-    xz = xaif.call("gemm", accel, x, params["in_proj"])
+    xz = xaif.call("gemm", policy, x, params["in_proj"])
     xi, z = jnp.split(xz, 2, axis=-1)                     # [B, T, Din] each
     conv_state = state.conv if state is not None else None
     xc, new_conv = apply_conv1d(params["conv"], xi, conv_state)
@@ -103,19 +103,19 @@ def apply_mamba(params, x: jax.Array, cfg: ArchConfig, accel: AccelConfig,
     dt, b, c = _split_xdbc(params, xc, cfg)
     a = -jnp.exp(params["a_log"])
     h0 = state.ssm if state is not None else None
-    y, h_final = xaif.call("ssm_scan", accel, xc, dt.astype(x.dtype), a, b, c,
+    y, h_final = xaif.call("ssm_scan", policy, xc, dt.astype(x.dtype), a, b, c,
                            params["d_skip"], h0)
     y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
-    out = xaif.call("gemm", accel, y.astype(x.dtype), params["out_proj"])
+    out = xaif.call("gemm", policy, y.astype(x.dtype), params["out_proj"])
     new_state = MambaState(new_conv, h_final) if state is not None else None
     return out, new_state
 
 
 def apply_mamba_decode(params, x: jax.Array, cfg: ArchConfig,
-                       accel: AccelConfig, state: MambaState
+                       policy: xaif.PolicyLike, state: MambaState
                        ) -> Tuple[jax.Array, MambaState]:
     """Single-token recurrence. x [B, 1, d]."""
-    xz = xaif.call("gemm", accel, x, params["in_proj"])
+    xz = xaif.call("gemm", policy, x, params["in_proj"])
     xi, z = jnp.split(xz, 2, axis=-1)
     xc, new_conv = apply_conv1d(params["conv"], xi, state.conv)
     xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
@@ -128,6 +128,6 @@ def apply_mamba_decode(params, x: jax.Array, cfg: ArchConfig,
     y = jnp.sum(h * c.astype(jnp.float32)[:, 0, None, :], axis=-1)  # [B, Din]
     y = y + params["d_skip"] * xc.astype(jnp.float32)[:, 0]
     y = y * jax.nn.silu(z.astype(jnp.float32)[:, 0])
-    out = xaif.call("gemm", accel, y[:, None].astype(x.dtype),
+    out = xaif.call("gemm", policy, y[:, None].astype(x.dtype),
                     params["out_proj"])
     return out, MambaState(new_conv, h)

@@ -22,7 +22,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import AccelConfig, ArchConfig, MoEConfig
+from repro.configs.base import ArchConfig, MoEConfig
 from repro.core import xaif
 from repro.models.layers import dense_init, init_mlp, apply_mlp
 
@@ -48,7 +48,7 @@ def _expert_init(key, e, d_in, d_out, dtype):
             * (d_in ** -0.5)).astype(dtype)
 
 
-def apply_moe(params, x: jax.Array, cfg: ArchConfig, accel: AccelConfig,
+def apply_moe(params, x: jax.Array, cfg: ArchConfig, policy: xaif.PolicyLike,
               groups: Optional[int] = None) -> Tuple[jax.Array, jax.Array]:
     """x [B, T, d] -> (y [B, T, d], aux_loss scalar).
 
@@ -119,7 +119,7 @@ def apply_moe(params, x: jax.Array, cfg: ArchConfig, accel: AccelConfig,
 
     # ---- shared experts (always-on) ----------------------------------------
     if "shared" in params:
-        y = y + apply_mlp(params["shared"], xg, accel).astype(jnp.float32)
+        y = y + apply_mlp(params["shared"], xg, policy).astype(jnp.float32)
 
     # ---- load-balance aux loss (Switch) ------------------------------------
     # (§Perf Q1: scatter-add counts instead of a [G, S, K, E] fp32 one-hot)

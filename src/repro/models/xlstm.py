@@ -24,7 +24,7 @@ from typing import Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import AccelConfig, ArchConfig
+from repro.configs.base import ArchConfig
 from repro.core import xaif
 from repro.models.layers import apply_conv1d, dense_init, init_conv1d
 
@@ -122,7 +122,7 @@ def _mlstm_headnorm(params, h_out, eps):
     return h_out * jax.lax.rsqrt(ms + eps)
 
 
-def apply_mlstm(params, x: jax.Array, cfg: ArchConfig, accel: AccelConfig,
+def apply_mlstm(params, x: jax.Array, cfg: ArchConfig, policy: xaif.PolicyLike,
                 state: Optional[MLSTMState] = None
                 ) -> Tuple[jax.Array, Optional[MLSTMState]]:
     """Chunkwise-parallel path. x [B, T, d]."""
@@ -196,7 +196,7 @@ def apply_mlstm(params, x: jax.Array, cfg: ArchConfig, accel: AccelConfig,
 
 
 def apply_mlstm_decode(params, x: jax.Array, cfg: ArchConfig,
-                       accel: AccelConfig, state: MLSTMState
+                       policy: xaif.PolicyLike, state: MLSTMState
                        ) -> Tuple[jax.Array, MLSTMState]:
     """O(1) recurrence. x [B, 1, d]."""
     b, _, d = x.shape
@@ -279,7 +279,7 @@ def _slstm_step(params, x_t, st: SLSTMState) -> Tuple[jax.Array, SLSTMState]:
     return h, SLSTMState(c, n, h, m_new)
 
 
-def apply_slstm(params, x: jax.Array, cfg: ArchConfig, accel: AccelConfig,
+def apply_slstm(params, x: jax.Array, cfg: ArchConfig, policy: xaif.PolicyLike,
                 state: Optional[SLSTMState] = None
                 ) -> Tuple[jax.Array, Optional[SLSTMState]]:
     """Sequential path (lax.scan over T). x [B, T, d]."""
@@ -304,7 +304,7 @@ def apply_slstm(params, x: jax.Array, cfg: ArchConfig, accel: AccelConfig,
 
 
 def apply_slstm_decode(params, x: jax.Array, cfg: ArchConfig,
-                       accel: AccelConfig, state: SLSTMState
+                       policy: xaif.PolicyLike, state: SLSTMState
                        ) -> Tuple[jax.Array, SLSTMState]:
-    out, st = apply_slstm(params, x, cfg, accel, state)
+    out, st = apply_slstm(params, x, cfg, policy, state)
     return out, st

@@ -45,21 +45,21 @@ from repro.models import lm
 
 
 def make_serve_step(run: RunConfig, gated: bool = False):
-    cfg, accel = run.arch, run.accel
+    cfg, policy = run.arch, run.accel
 
     def serve_step(params, cache: lm.LMCache, tokens):
         """tokens [B, 1] (or [B, 1, d] embeddings for stub frontends).
         Returns (next_tokens [B], info dict, new cache)."""
         if gated:
             logits, exit_mask, new_cache = lm.forward_decode_gated(
-                params, tokens, cfg, accel, cache)
+                params, tokens, cfg, policy, cache)
             info = {"exit_rate": jnp.mean(exit_mask.astype(jnp.float32))}
         else:
             logits, exit_lgs, new_cache = lm.forward_decode(
-                params, tokens, cfg, accel, cache)
+                params, tokens, cfg, policy, cache)
             if cfg.early_exit is not None and exit_lgs:
                 logits, exit_idx, info = merge_exit_logits(
-                    logits, exit_lgs, cfg.early_exit, accel)
+                    logits, exit_lgs, cfg.early_exit, policy)
                 info["gated_fraction"] = gated_layer_fraction(
                     exit_idx, cfg.early_exit.exit_layers, cfg.num_layers)
             else:
@@ -71,10 +71,10 @@ def make_serve_step(run: RunConfig, gated: bool = False):
 
 
 def make_prefill(run: RunConfig):
-    cfg, accel = run.arch, run.accel
+    cfg, policy = run.arch, run.accel
 
     def prefill(params, cache: lm.LMCache, tokens):
-        logits, new_cache = lm.forward_prefill(params, tokens, cfg, accel,
+        logits, new_cache = lm.forward_prefill(params, tokens, cfg, policy,
                                                cache)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_tok, new_cache
@@ -88,8 +88,9 @@ _GENERATE_JIT_CACHE: Dict[tuple, tuple] = {}
 def _generate_fns(run: RunConfig, gated: bool):
     """Jitted (prefill, step) cached across generate() calls — the seed
     rebuilt both closures per call, so every generation re-compiled."""
-    key = (run.arch, tuple(sorted(dict(run.accel.backends).items())),
-           run.accel.interpret, gated)
+    # both AccelConfig and xaif.DispatchPolicy are hashable, so the policy
+    # itself is the cache key — no manual flattening of its backend map
+    key = (run.arch, run.accel, gated)
     if key not in _GENERATE_JIT_CACHE:
         _GENERATE_JIT_CACHE[key] = (
             jax.jit(make_prefill(run)),
@@ -164,13 +165,13 @@ def make_prefill_slot(run: RunConfig, bucket_len: int):
     One trace per (arch, bucket) pair; the slot index, true length and token
     budget are traced arguments, so any request in the bucket reuses it.
     """
-    cfg, accel = run.arch, run.accel
+    cfg, policy = run.arch, run.accel
 
     def prefill_slot(params, cache: lm.LMCache, st: DecodeState,
                      tokens, true_len, slot, max_new):
         slot_cache = lm.init_cache(cfg, 1, bucket_len)
         logits, slot_cache = lm.forward_prefill(
-            params, tokens, cfg, accel, slot_cache,
+            params, tokens, cfg, policy, slot_cache,
             lengths=true_len[None])
         tok0 = jnp.argmax(logits[0], axis=-1).astype(jnp.int32)
         cache = lm.fill_slot(cache, slot_cache, slot, true_len)
@@ -193,7 +194,7 @@ def make_decode_chunk(run: RunConfig, steps: int, gated: bool = False):
     position is pinned, so the valid prefix never corrupts); the caller
     performs ONE host fetch of (tokens [S, steps], state) per chunk.
     """
-    cfg, accel = run.arch, run.accel
+    cfg, policy = run.arch, run.accel
     n_layers = cfg.num_layers
 
     def body(params, carry, _):
@@ -201,7 +202,7 @@ def make_decode_chunk(run: RunConfig, steps: int, gated: bool = False):
         live = ~st.done
         if gated:
             logits, exit_mask, new_cache = lm.forward_decode_gated(
-                params, st.tokens[:, None], cfg, accel, cache, live=live)
+                params, st.tokens[:, None], cfg, policy, cache, live=live)
             exited = exit_mask
             # credit gated compute ONLY when the lax.cond skip branch
             # actually ran (all live slots confident) — otherwise the
@@ -212,10 +213,10 @@ def make_decode_chunk(run: RunConfig, steps: int, gated: bool = False):
                                    1.0 - el / n_layers, 0.0)
         else:
             logits, exit_lgs, new_cache = lm.forward_decode(
-                params, st.tokens[:, None], cfg, accel, cache)
+                params, st.tokens[:, None], cfg, policy, cache)
             if cfg.early_exit is not None and exit_lgs:
                 logits, exit_idx, _ = merge_exit_logits(
-                    logits, exit_lgs, cfg.early_exit, accel)
+                    logits, exit_lgs, cfg.early_exit, policy)
                 bounds = jnp.asarray(
                     tuple(cfg.early_exit.exit_layers) + (n_layers,),
                     jnp.float32)

@@ -1,0 +1,109 @@
+"""kernels/_tiling.py — the shared flatten/pad/block helpers that every
+XAIF kernel wrapper now uses (deduplicated from per-op copies), with the
+edge dims the seed's copies silently disagreed on: dim < 8 and
+non-multiple-of-128."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels._tiling import (ceil_mult, divisor_block, flatten_lead,
+                                   pad_to)
+
+
+# ---------------------------------------------------------------------------
+# Unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_flatten_lead_shapes():
+    x = jnp.ones((2, 3, 5, 7))
+    x2, lead = flatten_lead(x)
+    assert x2.shape == (2 * 3 * 5, 7) and lead == (2, 3, 5)
+    # 1-D edge: a single row
+    x = jnp.ones((7,))
+    x2, lead = flatten_lead(x)
+    assert x2.shape == (1, 7) and lead == ()
+
+
+def test_pad_to_edge_dims():
+    x = jnp.arange(6, dtype=jnp.float32).reshape(2, 3)
+    p, added = pad_to(x, 8, axis=1)            # dim 3 < block 8
+    assert p.shape == (2, 8) and added == 5
+    np.testing.assert_array_equal(np.asarray(p[:, 3:]), 0)
+    p, added = pad_to(x, 128, axis=0)          # dim 2, big block
+    assert p.shape == (128, 3) and added == 126
+    p, added = pad_to(x, 3, axis=1)            # already aligned: no-op
+    assert p is x and added == 0
+    p, added = pad_to(x, 1, axis=0)            # m <= 1: no-op
+    assert p is x and added == 0
+    # non-multiple-of-128 dim pads to the next multiple
+    x = jnp.ones((130, 4))
+    p, added = pad_to(x, 128, axis=0)
+    assert p.shape == (256, 4) and added == 126
+
+
+def test_ceil_mult_edge_dims():
+    assert ceil_mult(5) == 8                   # tiny dims floor at 8
+    assert ceil_mult(1) == 8
+    assert ceil_mult(8) == 8
+    assert ceil_mult(100) == 64                # largest pow2 <= dim
+    assert ceil_mult(128) == 128
+    assert ceil_mult(4096) == 128              # capped at base
+    assert ceil_mult(100, base=32) == 32
+
+
+def test_divisor_block():
+    assert divisor_block(1024, 256) == 256     # block divides: unchanged
+    assert divisor_block(6, 256) == 2          # halve until it divides
+    assert divisor_block(8, 256) == 8
+    assert divisor_block(7, 256) == 1          # odd dim: single-row blocks
+    assert divisor_block(1, 4) == 1
+
+
+# ---------------------------------------------------------------------------
+# The helpers keep the Pallas wrappers correct on awkward shapes
+# ---------------------------------------------------------------------------
+
+
+def test_gemm_pallas_odd_shapes_match_ref():
+    """dims < 8 and non-multiples of 128 round-trip the pad/unpad path."""
+    from repro.kernels.gemm import ops as gemm_ops
+    for (m, k, n) in [(3, 5, 7), (130, 100, 66), (1, 257, 9)]:
+        x = jax.random.normal(jax.random.PRNGKey(0), (m, k), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(2), (n,), jnp.float32)
+        out = gemm_ops.gemm_pallas_op(x, w, b, "silu", interpret=True)
+        ref = gemm_ops.gemm_ref_op(x, w, b, "silu")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5, err_msg=str((m, k, n)))
+
+
+def test_rmsnorm_pallas_odd_rows_match_ref():
+    from repro.kernels.rmsnorm import ops as rn
+    for rows in (1, 6, 7, 130):
+        x = jax.random.normal(jax.random.PRNGKey(0), (rows, 96), jnp.float32)
+        s = jax.random.normal(jax.random.PRNGKey(1), (96,), jnp.float32)
+        out = rn.rmsnorm_pallas_op(x, s, interpret=True)
+        ref = rn.rmsnorm_ref_op(x, s)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5, err_msg=str(rows))
+
+
+def test_ssm_pallas_unaligned_seq_matches_ref():
+    """T not a multiple of the time block exercises pad_to + unpad."""
+    from repro.kernels.ssm_scan import ops as ssm
+    b, t, din, n = 2, 37, 16, 4
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 6)
+    u = jax.random.normal(ks[0], (b, t, din), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, din), jnp.float32))
+    a = -jnp.abs(jax.random.normal(ks[2], (din, n), jnp.float32))
+    bb = jax.random.normal(ks[3], (b, t, n), jnp.float32)
+    c = jax.random.normal(ks[4], (b, t, n), jnp.float32)
+    d = jax.random.normal(ks[5], (din,), jnp.float32)
+    y, h = ssm.ssm_pallas_op(u, dt, a, bb, c, d, interpret=True, bt=16)
+    yr, hr = ssm.ssm_ref_op(u, dt, a, bb, c, d)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               rtol=1e-4, atol=1e-4)
