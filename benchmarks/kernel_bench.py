@@ -17,6 +17,7 @@ candidate set that includes the static default).
 """
 from __future__ import annotations
 
+import json
 import time
 from typing import Dict, List
 
@@ -25,6 +26,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import AccelConfig
 from repro.core import xaif
+
+BENCH_JSON = "BENCH_kernels.json"
 
 
 def _time(fn, *args, iters=5) -> float:
@@ -91,6 +94,34 @@ def bench() -> List[Dict]:
                  "us_per_call_blockwise": us2,
                  "scores_bytes_materialized": 4 * 8 * 1024 * 1024,
                  "scores_bytes_blockwise": 4 * 8 * 1024 * 128})
+
+    # paged decode attention. The timing is the REF backend, which gathers
+    # the FULL page-table extent (invalid entries fetch the scratch page) —
+    # like every row here, the byte ratio is the ANALYTIC structural saving
+    # of the fused path, not a property of the measured ref: the Pallas
+    # backend's per-page BlockSpec DMA is what touches only RESIDENT pages,
+    # while any contiguous/gather decode streams B * max_len lanes per
+    # token regardless of actual lengths
+    b_, hkv_, ps_, np_, d_ = 8, 2, 16, 64, 64          # max_len 1024
+    pool = b_ * np_ + 1
+    kp = jax.random.normal(key, (pool, hkv_, ps_, d_), jnp.bfloat16)
+    vp = jax.random.normal(jax.random.fold_in(key, 4), (pool, hkv_, ps_, d_),
+                           jnp.bfloat16)
+    qd = jax.random.normal(jax.random.fold_in(key, 5), (b_, 8, d_),
+                           jnp.bfloat16)
+    table = (1 + jnp.arange(b_)[:, None] * np_
+             + jnp.arange(np_)[None, :]).astype(jnp.int32)
+    pos = (jnp.arange(b_, dtype=jnp.int32) * 97) % (np_ * ps_)
+    table = jnp.where(jnp.arange(np_)[None, :] <= pos[:, None] // ps_,
+                      table, -1)
+    f = jax.jit(lambda *a: xaif.call("attn_decode_paged", ref, *a))
+    us = _time(f, qd, kp, vp, table, pos)
+    resident = int(jnp.sum(pos // ps_ + 1)) * ps_
+    full = b_ * np_ * ps_
+    rows.append({"name": "attn_decode_paged_1k", "us_per_call_ref": us,
+                 "kv_lanes_ref_full_extent": full,
+                 "kv_lanes_pallas_resident": resident,
+                 "residency_byte_ratio_analytic": full / max(resident, 1)})
     return rows
 
 
@@ -118,8 +149,9 @@ def tuned_vs_static(iters: int = 3, scale: int = 1) -> List[Dict]:
     return rows
 
 
-if __name__ == "__main__":
-    for r in bench():
+def main(json_path: str = BENCH_JSON):
+    rows = bench()
+    for r in rows:
         print(r)
     print("--- autotuned DispatchPolicy vs static AccelConfig ---")
     cells = tuned_vs_static()
@@ -128,3 +160,13 @@ if __name__ == "__main__":
     assert all(r["not_slower"] for r in cells), \
         "tuned policy slower than static default on a measured cell"
     print(f"tuned policy not slower on all {len(cells)} measured cells")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"bench": "kernels", "micro": rows,
+                       "tuned_vs_static": cells},
+                      f, indent=2, sort_keys=True, default=str)
+        print(f"wrote {json_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,16 +1,21 @@
 """Quickstart: build an assigned architecture at reduced size, train it a few
 steps with the early-exit loss, then decode with entropy-gated early exit —
 first through the legacy host loop, then through the continuous-batching
-slot engine (the production serving path) running under an autotuned
+PAGED slot engine (the production serving path) running under an autotuned
 shape-aware dispatch policy.
 
-Serving in one paragraph: ``SlotEngine(run, capacity=S, max_len=L)`` owns a
-fixed batch of S cache SLOTS. ``serve(engine, params, requests)`` admits
-each request into a free slot (one bucketed batch-1 prefill), decodes ALL
-occupied slots in jitted lax.scan chunks (greedy sampling, early-exit merge
-and statistics on device — one host transfer per chunk), and backfills
-retired slots without re-compiling. ``repro.launch.serve`` wraps the same
-path in a Poisson request-stream simulator with latency percentiles.
+Serving in one paragraph: ``SlotEngine(run, capacity=S, max_len=L,
+paged=True)`` owns a fixed batch of S SLOTS whose attention KV lives in
+fixed-size pages from a shared pool — a request holds only the pages its
+tokens occupy, so admission is bounded by free PAGES (tokens actually
+resident), not slots x max_len. ``serve(engine, params, requests)`` admits
+each request into a free slot (one bucketed batch-1 prefill scattered into
+host-allocated pages), decodes ALL occupied slots in jitted lax.scan chunks
+(greedy sampling, early-exit merge and statistics on device — one host
+transfer per chunk; pages grow on demand between chunks), and backfills
+retired slots — returning their pages to the pool — without re-compiling.
+Decode is token-identical to the contiguous engine. ``repro.launch.serve``
+wraps the same path in a Poisson request-stream simulator (--paged).
 
     PYTHONPATH=src python examples/quickstart.py [--arch yi-9b] [--steps 30]
 """
@@ -66,20 +71,22 @@ def main():
               f"{dict(tuning) or ''}")
     run = dataclasses.replace(run, accel=tuned.policy)
 
-    # --- continuous-batching slot engine -----------------------------------
+    # --- continuous-batching PAGED slot engine -----------------------------
     import numpy as np
     from repro.serve.engine import SlotEngine
     from repro.serve.scheduler import Request, serve
 
-    engine = SlotEngine(run, capacity=2, max_len=32, chunk=4)
+    engine = SlotEngine(run, capacity=2, max_len=32, chunk=4,
+                        paged=True, page_size=8)
     requests = [Request(rid=i, prompt=np.asarray(prompt[i]),
                         max_new_tokens=8) for i in range(4)]
     report = serve(engine, params, requests)   # 4 requests through 2 slots
     lat = report.latency_percentiles()
-    print(f"slot engine: {report.decode_tokens} tokens at "
+    print(f"paged slot engine: {report.decode_tokens} tokens at "
           f"{report.tokens_per_s:.0f} tok/s "
           f"(p50 {lat['p50']*1e3:.0f}ms, p99 {lat['p99']*1e3:.0f}ms); "
-          f"decode traces={engine.decode_traces}")
+          f"decode traces={engine.decode_traces}, "
+          f"peak pages {int(report.stats['peak_pages'])}")
 
 
 if __name__ == "__main__":

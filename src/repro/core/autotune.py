@@ -100,18 +100,55 @@ def _attention_cell(t: int):
     return build
 
 
-def _ssm_cell(t: int):
+def _ssm_cell(t: int, batch: int = 2, din: int = 32, n: int = 8):
     def build(scale: int):
         t_len = 1 if t == 1 else t * scale
-        din, n = 32, 8
-        u = jax.random.normal(_key(0), (2, t_len, din), jnp.float32)
-        dt = jax.nn.softplus(jax.random.normal(_key(1), (2, t_len, din),
+        u = jax.random.normal(_key(0), (batch, t_len, din), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(_key(1), (batch, t_len, din),
                                                jnp.float32))
         a = -jnp.abs(jax.random.normal(_key(2), (din, n), jnp.float32))
-        b = jax.random.normal(_key(3), (2, t_len, n), jnp.float32)
-        c = jax.random.normal(_key(4), (2, t_len, n), jnp.float32)
+        b = jax.random.normal(_key(3), (batch, t_len, n), jnp.float32)
+        c = jax.random.normal(_key(4), (batch, t_len, n), jnp.float32)
         d = jax.random.normal(_key(5), (din,), jnp.float32)
         return (u, dt, a, b, c, d), {}
+    return build
+
+
+def _paged_attn_cell(np_pages: int, batch: int = 4, hq: int = 4,
+                     hkv: int = 2, d: int = 32, ps: int = 16,
+                     mla_rope_dim: int = 0):
+    """One attn_decode_paged cell: ``batch`` sequences of staggered lengths
+    over a pool sized for ``np_pages`` pages each (+ the scratch page).
+
+    ``mla_rope_dim`` > 0 builds the MLA serve-time call instead: a single
+    latent head (hkv must be 1), ``d``-wide latent pages, precise fp32
+    post-scale and the rotary key as the q2/k2 second score component."""
+    def build(scale: int):
+        np_ = np_pages                    # bucket boundary is NP*ps; fixed
+        pool = batch * np_ + 1
+        q = jax.random.normal(_key(0), (batch, hq, d), jnp.float32)
+        kp = jax.random.normal(_key(1), (pool, hkv, ps, d), jnp.float32)
+        vp = jax.random.normal(_key(2), (pool, hkv, ps, d), jnp.float32)
+        # slot b owns pages [1 + b*np_, 1 + (b+1)*np_), lengths staggered
+        table = (1 + jnp.arange(batch)[:, None] * np_
+                 + jnp.arange(np_)[None, :]).astype(jnp.int32)
+        pos = (jnp.arange(batch, dtype=jnp.int32) * ps
+               + ps // 2) % (np_ * ps)
+        n_alloc = pos // ps + 1
+        table = jnp.where(jnp.arange(np_)[None, :] < n_alloc[:, None],
+                          table, -1)
+        kwargs = {}
+        if mla_rope_dim:
+            assert hkv == 1
+            kwargs = {
+                "scale": (d + mla_rope_dim) ** -0.5,
+                "q2": jax.random.normal(_key(3), (batch, hq, mla_rope_dim),
+                                        jnp.float32),
+                "k2_pages": jax.random.normal(
+                    _key(4), (pool, 1, ps, mla_rope_dim), jnp.float32),
+                "precise": True,
+            }
+        return (q, kp, vp, table, pos), kwargs
     return build
 
 
@@ -144,7 +181,92 @@ CELLS: Dict[Tuple[str, str], Callable] = {
     ("attention", "prefill"): _attention_cell(128),
     ("ssm_scan", "decode"): _ssm_cell(1),
     ("ssm_scan", "scan"): _ssm_cell(128),
+    ("attn_decode_paged", "kv_s"): _paged_attn_cell(8),     # 8*16  = 128 kv
+    ("attn_decode_paged", "kv_l"): _paged_attn_cell(128),   # 128*16 = 2048
 }
+
+
+def arch_cells(cfg, *, capacity: int = 8, bucket_len: int = 64,
+               max_len: int = 256,
+               page_size: int = 16) -> Dict[Tuple[str, str], Callable]:
+    """Measurement cells at one ARCH's exact serve-time dims.
+
+    The generic ``CELLS`` measure representative shape classes; a tuned
+    policy for a specific deployment should measure the row-op / attention
+    shapes that arch actually emits at decode (rows = slot capacity, widths
+    = d_model/d_ff/vocab, the arch's head layout, its paged-KV extent).
+    Returned cells OVERLAY the generic ones for the buckets they land in;
+    pass them via ``autotune(arch=cfg)`` and the report records the arch
+    as each overlaid cell's source (ROADMAP follow-up from PR 2).
+    """
+    d, dff, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    rows_s = min(capacity, 32)
+    rows_m = min(max(bucket_len, 33), 2048)
+
+    def gemm(m, k, n):
+        def build(scale):
+            return ((jax.random.normal(_key(0), (m, k), jnp.float32),
+                     jax.random.normal(_key(1), (k, n), jnp.float32)), {})
+        return build
+
+    def rows(m, n):
+        def build(scale):
+            return ((jax.random.normal(_key(0), (m, n), jnp.float32),
+                     jnp.ones((n,), jnp.float32)), {})
+        return build
+
+    def entropy(m, n):
+        def build(scale):
+            return ((jax.random.normal(_key(0), (m, n), jnp.float32),), {})
+        return build
+
+    # MLA archs attend a different geometry: prefill runs dqk-wide q/k with
+    # a narrower v head, decode attends the latent (one shared head,
+    # lora-rank wide, rotary second component, precise fp32)
+    dqk = hd if cfg.mla is None else (cfg.mla.qk_nope_head_dim
+                                      + cfg.mla.qk_rope_head_dim)
+    dv = hd if cfg.mla is None else cfg.mla.v_head_dim
+    attn_hkv = hkv if cfg.mla is None else hq
+
+    def attention(t, s):
+        def build(scale):
+            q = jax.random.normal(_key(0), (capacity, hq, t, dqk), jnp.float32)
+            k = jax.random.normal(_key(1), (capacity, attn_hkv, s, dqk),
+                                  jnp.float32)
+            vv = jax.random.normal(_key(2), (capacity, attn_hkv, s, dv),
+                                   jnp.float32)
+            return (q, k, vv), {}
+        return build
+
+    cells: Dict[Tuple[str, str], Callable] = {
+        # decode row ops: every projection / norm / exit check in the decode
+        # step runs at [capacity, width]
+        ("gemm", "rows_s"): gemm(rows_s, d, dff),
+        ("gemm", "rows_m"): gemm(rows_m, d, dff),
+        ("rmsnorm", "rows_s"): rows(rows_s, d),
+        ("rmsnorm", "rows_m"): rows(rows_m, d),
+        ("entropy_exit", "rows_s"): entropy(rows_s, v),
+        ("attention", "decode"): attention(1, max_len),
+        ("attention", "prefill"): attention(bucket_len, bucket_len),
+    }
+    np_ = -(-max_len // page_size)
+    paged_bucket = "kv_s" if np_ * page_size <= 1024 else "kv_l"
+    if cfg.mla is None:
+        cells[("attn_decode_paged", paged_bucket)] = _paged_attn_cell(
+            np_, batch=rows_s, hq=hq, hkv=hkv, d=hd, ps=page_size)
+    else:
+        cells[("attn_decode_paged", paged_bucket)] = _paged_attn_cell(
+            np_, batch=rows_s, hq=hq, hkv=1, d=cfg.mla.kv_lora_rank,
+            ps=page_size, mla_rope_dim=cfg.mla.qk_rope_head_dim)
+    if cfg.mamba is not None:
+        from repro.models.mamba import _dims
+        d_inner, _, n_state = _dims(cfg)
+        cells[("ssm_scan", "decode")] = _ssm_cell(
+            1, batch=rows_s, din=d_inner, n=n_state)
+        cells[("ssm_scan", "scan")] = _ssm_cell(
+            bucket_len, batch=1, din=d_inner, n=n_state)
+    return cells
 
 
 def _cost_args(op: str, shapes) -> Optional[tuple]:
@@ -165,6 +287,9 @@ def _cost_args(op: str, shapes) -> Optional[tuple]:
         if op == "attention":
             q, k = shapes[0], shapes[1]
             return (q[0], q[1], q[2], k[2], q[3])
+        if op == "attn_decode_paged":
+            q, kp, pt = shapes[0], shapes[1], shapes[3]
+            return (q[0], q[1], pt[1], kp[2], q[2])
         if op == "ssm_scan":
             u, a = shapes[0], shapes[2]
             return (u[0], u[1], u[2], a[-1])
@@ -209,6 +334,9 @@ class CellReport:
 
     op: str
     bucket: str
+    # which workload produced this cell: "generic" (the CELLS table), an
+    # arch name (autotune(arch=...)), or "custom" (cells= argument)
+    source: str = "generic"
     # backend name -> best measured us (inf if it failed / unsupported)
     measured_us: Dict[str, float] = field(default_factory=dict)
     # backend name -> winning tuning tuple for that backend
@@ -232,12 +360,15 @@ class AutotuneResult:
     baseline: AccelConfig
 
     def persist(self, path: str = DEFAULT_POLICY_PATH) -> str:
-        """Write the policy JSON (plus the measurements, which
-        DispatchPolicy.from_json ignores on load)."""
-        meas = [{"op": c.op, "bucket": c.bucket, "measured_us": c.measured_us,
+        """Write the policy JSON (plus the measurements — including which
+        arch produced each cell — which DispatchPolicy.from_json ignores
+        on load)."""
+        meas = [{"op": c.op, "bucket": c.bucket, "source": c.source,
+                 "measured_us": c.measured_us,
                  "skipped": c.skipped, "prior": c.prior}
                 for c in self.cells]
-        self.policy.save(path, measurements=meas)
+        sources = {f"{c.op}/{c.bucket}": c.source for c in self.cells}
+        self.policy.save(path, measurements=meas, cell_sources=sources)
         return path
 
 
@@ -249,6 +380,10 @@ def autotune(ops: Optional[Sequence[str]] = None, *,
              baseline: Optional[AccelConfig] = None,
              default: str = "ref",
              allow_lossy: bool = False,
+             arch=None,
+             capacity: int = 8,
+             max_len: int = 256,
+             page_size: int = 16,
              cells: Optional[Dict[Tuple[str, str], Callable]] = None,
              print_fn: Optional[Callable] = None) -> AutotuneResult:
     """Measure every backend per (op, bucket) cell; return the winning
@@ -258,6 +393,12 @@ def autotune(ops: Optional[Sequence[str]] = None, *,
     any ``cells`` mapping {(op, bucket): build(scale) -> (args, kwargs)}
     for ops registered outside this repo; requested ops with no cell are
     reported through ``print_fn`` rather than silently untuned.
+
+    ``arch`` (an ArchConfig) overlays :func:`arch_cells` — the arch's EXACT
+    serve-time dims (decode row ops at ``capacity`` rows, its head layout,
+    its paged-KV extent at ``max_len``) replace the generic shape classes
+    for the buckets they land in, and each cell's report/persisted JSON
+    records the arch that produced it.
 
     ``baseline`` (default: the all-"ref" AccelConfig) names the static
     choice each cell must at least match; its backend is always measured,
@@ -273,8 +414,15 @@ def autotune(ops: Optional[Sequence[str]] = None, *,
     want = set(ops) if ops else set(xaif.ops())
     say = print_fn or (lambda *_: None)
     all_cells = dict(CELLS)
+    sources = {key: "generic" for key in all_cells}
+    if arch is not None:
+        overlay = arch_cells(arch, capacity=capacity, max_len=max_len,
+                             page_size=page_size)
+        all_cells.update(overlay)
+        sources.update({key: arch.name for key in overlay})
     if cells:
         all_cells.update(cells)
+        sources.update({key: "custom" for key in cells})
     uncovered = want - {op for (op, _) in all_cells}
     if uncovered:
         say(f"  WARNING: no measurement cells for ops {sorted(uncovered)} "
@@ -289,7 +437,7 @@ def autotune(ops: Optional[Sequence[str]] = None, *,
         shapes = tuple(tuple(a.shape) for a in args)
         got = xaif.shape_bucket(op, shapes)
         assert got == bucket, (op, bucket, got, shapes)
-        report = CellReport(op, bucket)
+        report = CellReport(op, bucket, source=sources[(op, bucket)])
 
         # the cost prior: estimate the cell's work before running anything,
         # and shrink the timing loop for heavy cells

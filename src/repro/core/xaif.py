@@ -154,12 +154,21 @@ def _ssm_bucket(shapes, _dtype):
     return "decode" if int(shapes[0][1]) == 1 else "scan"
 
 
+def _paged_bucket(shapes, _dtype):
+    # (q [B,Hq,D], k_pages [P,Hkv,ps,D], v_pages, page_table [B,NP], pos):
+    # bucket by resident KV extent NP*ps — short contexts fit a gather,
+    # long ones want the page-blocked kernel
+    s = int(shapes[1][2]) * int(shapes[3][1])
+    return "kv_s" if s <= 1024 else "kv_l"
+
+
 _BUCKET_FNS: Dict[str, Callable] = {
     "gemm": _rows_bucket,
     "rmsnorm": _rows_bucket,
     "entropy_exit": _rows_bucket,
     "attention": _attention_bucket,
     "ssm_scan": _ssm_bucket,
+    "attn_decode_paged": _paged_bucket,
 }
 
 _OP_BUCKETS: Dict[str, Tuple[str, ...]] = {
@@ -168,6 +177,7 @@ _OP_BUCKETS: Dict[str, Tuple[str, ...]] = {
     "entropy_exit": ("rows_s", "rows_m", "rows_l"),
     "attention": ("decode", "prefill"),
     "ssm_scan": ("decode", "scan"),
+    "attn_decode_paged": ("kv_s", "kv_l"),
 }
 
 WILDCARD = "*"
@@ -444,3 +454,4 @@ def _ensure_builtin_backends():
     from repro.kernels.entropy_exit import ops as _entropy_ops   # noqa: F401
     from repro.kernels.flash_attention import ops as _fa_ops     # noqa: F401
     from repro.kernels.ssm_scan import ops as _ssm_ops           # noqa: F401
+    from repro.kernels.paged_attention import ops as _paged_ops  # noqa: F401

@@ -1,0 +1,87 @@
+"""Reference paged decode attention: gather pages via the page table.
+
+One query token per sequence attends a KV cache stored as fixed-size pages
+(``k_pages``/``v_pages`` are global pools; ``page_table[b, j]`` names the
+pool page holding positions ``[j*ps, (j+1)*ps)`` of sequence ``b``, -1 =
+unallocated). Junk in unallocated / partially-filled pages is masked by the
+per-page validity test before the softmax, so page reuse never needs a
+zeroing pass.
+
+Two numeric modes mirror the two contiguous decode paths bit-for-bit (the
+serve engine asserts token identity between paged and contiguous engines):
+
+* default (GQA): operands kept in the cache dtype (bf16), query pre-scaled,
+  fp32 MXU accumulation — exactly ``attention.apply_attention_decode``;
+* ``precise=True`` (MLA absorbed decode): everything fp32, scale applied
+  AFTER the q.k dot products, optional second score component
+  (``q2``/``k2_pages`` — the shared rotary key) added before scaling —
+  exactly ``attention.apply_mla_decode``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def _gather(pages: jax.Array, page_table: jax.Array) -> jax.Array:
+    """pages [P, Hkv, ps, D], page_table [B, NP] -> [B, Hkv, NP*ps, D].
+
+    Invalid entries (-1) gather page 0 (the reserved scratch page); their
+    lanes are masked by the caller's validity test.
+    """
+    b, np_ = page_table.shape
+    _, hkv, ps, d = pages.shape
+    g = pages[jnp.maximum(page_table, 0)]          # [B, NP, Hkv, ps, D]
+    return g.transpose(0, 2, 1, 3, 4).reshape(b, hkv, np_ * ps, d)
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        page_table: jax.Array, cache_pos: jax.Array,
+                        scale: Optional[float] = None,
+                        q2: Optional[jax.Array] = None,
+                        k2_pages: Optional[jax.Array] = None,
+                        precise: bool = False) -> jax.Array:
+    """q [B, Hq, D]; k_pages [P, Hkv, ps, D]; v_pages [P, Hkv, ps, Dv];
+    page_table [B, NP] int32; cache_pos [B] int32 (positions <= cache_pos
+    are valid). Returns fp32 [B, Hq, Dv]."""
+    b, hq, d = q.shape
+    _, hkv, ps, _ = k_pages.shape
+    np_ = page_table.shape[1]
+    s = np_ * ps
+    g = hq // hkv
+    valid = (jnp.arange(s)[None, :] <= cache_pos[:, None]) \
+        & jnp.repeat(page_table >= 0, ps, axis=1)           # [B, S]
+    k = _gather(k_pages, page_table)
+    v = _gather(v_pages, page_table)
+    if precise:
+        # fp32 throughout, post-scale — the MLA absorbed-decode numerics.
+        # Hkv == 1: the latent is one shared "KV head" over all query heads.
+        assert hkv == 1, "precise mode is the MLA path (single latent head)"
+        scale_ = d ** -0.5 if scale is None else scale
+        logits = jnp.einsum("bhd,bsd->bhs", q.astype(jnp.float32),
+                            k[:, 0].astype(jnp.float32))
+        if q2 is not None:
+            k2 = _gather(k2_pages, page_table)
+            logits = logits + jnp.einsum(
+                "bhd,bsd->bhs", q2.astype(jnp.float32),
+                k2[:, 0].astype(jnp.float32))
+        logits = logits * scale_
+        logits = jnp.where(valid[:, None, :], logits, _NEG)
+        p = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhs,bsd->bhd", p, v[:, 0].astype(jnp.float32))
+    # GQA decode numerics: cache-dtype operands, pre-scaled query, fp32
+    # accumulation on the MXU (see attention.apply_attention_decode — an
+    # fp32 cast of k/v would materialize a full fp32 cache copy per layer)
+    scale_ = d ** -0.5 if scale is None else scale
+    qg = (q.reshape(b, hkv, g, d) * scale_).astype(k_pages.dtype)
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits = jnp.where(valid[:, None, None, :], logits, _NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, v.shape[-1])

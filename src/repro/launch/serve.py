@@ -11,11 +11,19 @@ decode throughput plus per-request latency percentiles (p50/p99):
 ``--rate 0`` disables arrival pacing (closed-loop: every request is ready
 at t=0 — the pure-throughput configuration the benchmarks use).
 
+``--paged`` serves through the paged KV engine: attention KV lives in
+fixed-size pages (``--page-size``) from a pool of ``--num-pages`` and
+admission is by free pages, so short requests stop reserving worst-case
+``--max-len`` rows. Shrink ``--num-pages`` below the contiguous worst case
+(capacity x max_len / page_size) to trade headroom for concurrency.
+
 Backend selection: by default the static all-"ref" AccelConfig. Pass
 ``--policy PATH`` to serve under a persisted shape-aware DispatchPolicy
 (produced by ``repro.core.autotune``), or ``--autotune`` to run the
-measured sweep at startup (persisting to ``--policy``'s path, default
-``.xaif_policy.json``, so the next launch skips the measurement).
+measured sweep at startup — at THIS arch's exact serve-time dims (row ops
+at the slot capacity, its head layout, its paged-KV extent; the policy
+JSON records the arch per cell) — persisting to ``--policy``'s path
+(default ``.xaif_policy.json``) so the next launch skips the measurement.
 """
 from __future__ import annotations
 
@@ -50,17 +58,28 @@ def main():
                     help="decode steps per jitted scan chunk")
     ap.add_argument("--threshold", type=float, default=None)
     ap.add_argument("--gated", action="store_true")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: page-pool storage + page-aware "
+                         "admission (capacity = tokens, not slots x max_len)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="page pool size (0 = contiguous worst case)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--policy", default=autotune_mod.DEFAULT_POLICY_PATH,
                     help="path to a persisted DispatchPolicy JSON")
     ap.add_argument("--autotune", action="store_true",
-                    help="run the measured backend sweep at startup and "
-                         "persist the winning policy to --policy")
+                    help="run the measured backend sweep at startup — at "
+                         "this arch's exact serve-time dims — and persist "
+                         "the winning policy to --policy")
     args = ap.parse_args()
 
     if args.autotune:
-        print(f"autotuning XAIF backends -> {args.policy}")
-        result = autotune_mod.autotune(iters=2, print_fn=print)
+        arch_for_cells = get_arch(args.arch).reduced()
+        print(f"autotuning XAIF backends at {args.arch} serve dims "
+              f"-> {args.policy}")
+        result = autotune_mod.autotune(
+            iters=2, arch=arch_for_cells, capacity=args.capacity,
+            max_len=args.max_len, page_size=args.page_size, print_fn=print)
         result.persist(args.policy)
         policy = result.policy
     elif os.path.exists(args.policy):
@@ -89,13 +108,15 @@ def main():
         vocab_size=cfg.vocab_size, seed=args.seed)
 
     engine = SlotEngine(run, capacity=args.capacity, max_len=args.max_len,
-                        chunk=args.chunk, gated=gated)
+                        chunk=args.chunk, gated=gated, paged=args.paged,
+                        page_size=args.page_size,
+                        num_pages=args.num_pages or None)
     report = serve(engine, params, requests, realtime=args.rate > 0)
 
     lat = report.latency_percentiles()
     print(f"arch={cfg.name} capacity={args.capacity} "
           f"requests={args.requests} rate={args.rate or 'inf'}/s "
-          f"gated={gated}")
+          f"gated={gated} paged={args.paged}")
     print(f"  traces: decode={engine.decode_traces} "
           f"prefill_buckets={engine.prefill_traces} "
           f"(decode chunks run: {engine.decode_calls})")
@@ -103,6 +124,12 @@ def main():
           f"{report.wall_s:.2f}s = {report.tokens_per_s:.1f} tok/s")
     print(f"  latency: p50={lat['p50']*1e3:.0f}ms p99={lat['p99']*1e3:.0f}ms "
           f"mean={lat['mean']*1e3:.0f}ms")
+    print(f"  concurrency: peak {int(report.stats['max_concurrency'])} "
+          f"slots" + (f", peak pages {int(report.stats['peak_pages'])}"
+                      f"/{engine.num_pages - 1}" if args.paged else ""))
+    if report.rejected:
+        print(f"  rejected: {len(report.rejected)} request(s) "
+              f"(first: {report.rejected[0].reject_reason})")
     print(f"  exit stats: exit_rate={report.stats['exit_rate']:.2%} "
           f"gated_fraction={report.stats['gated_fraction']:.2%}")
 

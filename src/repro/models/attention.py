@@ -38,6 +38,19 @@ class MLACache(NamedTuple):
     k_rope: jax.Array       # [B, S, rope_dim]
 
 
+class PagedKVCache(NamedTuple):
+    """Per-layer page pools. Page 0 is the reserved SCRATCH page (dead-slot
+    writes land there; never allocated, never validly read). Logical page
+    ids are shared across layers via the PagedLMCache page table."""
+    k_pages: jax.Array      # [P, Hkv, ps, D]
+    v_pages: jax.Array      # [P, Hkv, ps, D]
+
+
+class PagedMLACache(NamedTuple):
+    c_kv_pages: jax.Array   # [P, ps, kv_lora_rank]
+    k_rope_pages: jax.Array  # [P, ps, rope_dim]
+
+
 def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> KVCache:
     shape = (batch, cfg.num_kv_heads, max_len, cfg.head_dim)
     return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
@@ -49,6 +62,67 @@ def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> MLACache
         jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
         jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
     )
+
+
+def init_paged_kv_cache(cfg: ArchConfig, num_pages: int, page_size: int,
+                        dtype) -> PagedKVCache:
+    shape = (num_pages, cfg.num_kv_heads, page_size, cfg.head_dim)
+    return PagedKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def init_paged_mla_cache(cfg: ArchConfig, num_pages: int, page_size: int,
+                         dtype) -> PagedMLACache:
+    m = cfg.mla
+    return PagedMLACache(
+        jnp.zeros((num_pages, page_size, m.kv_lora_rank), dtype),
+        jnp.zeros((num_pages, page_size, m.qk_rope_head_dim), dtype),
+    )
+
+
+def _to_pages(x: jax.Array, seq_axis: int, page_size: int,
+              n_pages: int) -> jax.Array:
+    """Chop a contiguous batch-1 cache array into page-shaped chunks.
+
+    Moves ``seq_axis`` to the front, pads it to ``n_pages * page_size`` and
+    splits: result [n_pages, page_size, *rest] matching the pool layout
+    after the caller re-inserts the per-page axes.
+    """
+    x = jnp.moveaxis(x, seq_axis, 0)
+    pad = n_pages * page_size - x.shape[0]
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    return x.reshape(n_pages, page_size, *x.shape[1:])
+
+
+def fill_pages(paged, src, page_ids: jax.Array, stacked: bool):
+    """Scatter a contiguous batch-1 prefilled KV/MLA cache into pool pages.
+
+    ``src`` covers positions [0, L); page_ids [ceil(L/ps)] are the pool
+    pages that will hold them (host-allocated, exclusive to this slot).
+    Junk beyond the true length is masked at read time by cache_pos, so the
+    padded tail of a bucketed prefill needs no special handling. ``stacked``
+    marks [n_sb, ...]-stacked slot states (vmapped over the stack).
+    """
+    if stacked:
+        return jax.vmap(lambda pg, sc: fill_pages(pg, sc, page_ids, False)
+                        )(paged, src)
+    n_pages = page_ids.shape[0]
+    if isinstance(paged, PagedKVCache):
+        ps = paged.k_pages.shape[2]
+        # src.k [1, Hkv, L, D] -> [n_pages, ps, Hkv, D] -> pool layout
+        def chop(a):
+            return _to_pages(a[0], 1, ps, n_pages).transpose(0, 2, 1, 3)
+        return PagedKVCache(
+            paged.k_pages.at[page_ids].set(chop(src.k).astype(paged.k_pages.dtype)),
+            paged.v_pages.at[page_ids].set(chop(src.v).astype(paged.v_pages.dtype)))
+    assert isinstance(paged, PagedMLACache), type(paged)
+    ps = paged.c_kv_pages.shape[1]
+    # src.c_kv [1, L, lora] -> [n_pages, ps, lora]
+    return PagedMLACache(
+        paged.c_kv_pages.at[page_ids].set(
+            _to_pages(src.c_kv[0], 0, ps, n_pages).astype(paged.c_kv_pages.dtype)),
+        paged.k_rope_pages.at[page_ids].set(
+            _to_pages(src.k_rope[0], 0, ps, n_pages).astype(paged.k_rope_pages.dtype)))
 
 
 def fill_slot(cache, src, slot, axis: int = 0):
@@ -171,6 +245,53 @@ def apply_attention_decode(params, x, cfg: ArchConfig, policy: xaif.PolicyLike,
                      preferred_element_type=jnp.float32)
     out = out.reshape(b, 1, hq * dh).astype(x.dtype)
     return xaif.call("gemm", policy, out, params["wo"]), KVCache(ck, cv)
+
+
+def _current_page(page_table: jax.Array, cache_pos: jax.Array, ps: int
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """(page id, in-page offset) of each sequence's current write position.
+
+    THE dead-slot routing invariant lives here: entries of -1 (dead/empty
+    slots) are routed to the scratch page 0, whose contents are never
+    validly read. Both pool layouts (GQA and MLA) share it.
+    """
+    b = cache_pos.shape[0]
+    pid = page_table[jnp.arange(b), cache_pos // ps]
+    return jnp.where(pid >= 0, pid, 0), cache_pos % ps
+
+
+def _page_append(pages: jax.Array, new: jax.Array, page_table: jax.Array,
+                 cache_pos: jax.Array) -> jax.Array:
+    """Write each sequence's new-token row into its current page (MLA
+    [P, ps, d] pool layout)."""
+    safe, off = _current_page(page_table, cache_pos, pages.shape[1])
+    return pages.at[safe, off].set(new.astype(pages.dtype))
+
+
+def apply_attention_decode_paged(params, x, cfg: ArchConfig,
+                                 policy: xaif.PolicyLike, state: PagedKVCache,
+                                 cache_pos: jax.Array, page_table: jax.Array
+                                 ) -> Tuple[jax.Array, PagedKVCache]:
+    """One-token decode against the page pool. x [B, 1, d]; cache_pos [B] =
+    the new token's position; page_table [B, NP] (-1 = unallocated).
+
+    The new K/V row is appended into each sequence's current page, then the
+    ``attn_decode_paged`` XAIF op attends via the page table. Numerics are
+    bitwise-identical to ``apply_attention_decode`` (ref backend) when the
+    paged extent NP*ps equals the contiguous cache's S axis.
+    """
+    b = x.shape[0]
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q, k, v = _project_qkv(params, x, cfg, policy, cache_pos[:, None])
+    safe, off = _current_page(page_table, cache_pos, state.k_pages.shape[2])
+    kp = state.k_pages.at[safe, :, off, :].set(
+        k[:, :, 0, :].astype(state.k_pages.dtype))
+    vp = state.v_pages.at[safe, :, off, :].set(
+        v[:, :, 0, :].astype(state.v_pages.dtype))
+    out = xaif.call("attn_decode_paged", policy, q[:, :, 0, :], kp, vp,
+                    page_table, cache_pos)
+    out = out.reshape(b, 1, hq * dh).astype(x.dtype)
+    return xaif.call("gemm", policy, out, params["wo"]), PagedKVCache(kp, vp)
 
 
 # ---------------------------------------------------------------------------
@@ -296,3 +417,42 @@ def apply_mla_decode(params, x, cfg: ArchConfig, policy: xaif.PolicyLike,
     out = out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
     return (xaif.call("gemm", policy, out, params["wo"]),
             MLACache(c_kv, k_rope))
+
+
+def apply_mla_decode_paged(params, x, cfg: ArchConfig,
+                           policy: xaif.PolicyLike, state: PagedMLACache,
+                           cache_pos: jax.Array, page_table: jax.Array
+                           ) -> Tuple[jax.Array, PagedMLACache]:
+    """Absorbed-matrix MLA decode against paged latents.
+
+    The latent is one shared "KV head": score = q_abs.c_s + q_rope.kr_s,
+    value = c_s — so the same ``attn_decode_paged`` op serves MLA with
+    Hkv=1, ``precise=True`` (fp32, post-scale — the absorbed-decode
+    numerics) and the rotary key as the second score component. The pooled
+    latent comes back from the op and is decompressed per head exactly as
+    in ``apply_mla_decode``.
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.num_heads
+    positions = cache_pos[:, None]
+    c_new, kr_new = _mla_latent(params, x, cfg, policy, positions)
+    q_nope, q_rope = _mla_queries(params, x, cfg, policy, positions)
+    c_pages = _page_append(state.c_kv_pages, c_new[:, 0], page_table,
+                           cache_pos)
+    kr_pages = _page_append(state.k_rope_pages, kr_new[:, 0], page_table,
+                            cache_pos)
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    q_abs = jnp.einsum("bhd,lhd->bhl", q_nope[:, :, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    pooled = xaif.call(
+        "attn_decode_paged", policy, q_abs,
+        c_pages[:, None], c_pages[:, None], page_table, cache_pos,
+        scale=scale, q2=q_rope[:, :, 0], k2_pages=kr_pages[:, None],
+        precise=True)                                       # [B, H, lora]
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bhl,lhd->bhd", pooled, w_uv.astype(jnp.float32))
+    out = out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
+    return (xaif.call("gemm", policy, out, params["wo"]),
+            PagedMLACache(c_pages, kr_pages))

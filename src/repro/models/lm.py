@@ -64,22 +64,34 @@ def _init_layer(key, spec: BlockSpec, cfg: ArchConfig, dtype) -> Dict:
 
 
 def _apply_layer(p, x, spec: BlockSpec, cfg: ArchConfig, policy: xaif.PolicyLike,
-                 state=None, mode: str = "train", cache_pos=None):
-    """Returns (x, aux_loss, new_state)."""
+                 state=None, mode: str = "train", cache_pos=None,
+                 page_table=None):
+    """Returns (x, aux_loss, new_state). ``page_table`` [B, NP] routes
+    attention decode through the paged path (state is a Paged*Cache)."""
     h = rmsnorm(p["ln1"], x, policy, cfg.norm_eps)
     new_state = None
     if spec.mixer == "attn":
         if cfg.mla is not None:
             if mode == "decode":
-                out, new_state = attn.apply_mla_decode(p["mixer"], h, cfg,
-                                                       policy, state, cache_pos)
+                if isinstance(state, attn.PagedMLACache):
+                    out, new_state = attn.apply_mla_decode_paged(
+                        p["mixer"], h, cfg, policy, state, cache_pos,
+                        page_table)
+                else:
+                    out, new_state = attn.apply_mla_decode(
+                        p["mixer"], h, cfg, policy, state, cache_pos)
             else:
                 out, new_state = attn.apply_mla(p["mixer"], h, cfg, policy,
                                                 cache=state)
         else:
             if mode == "decode":
-                out, new_state = attn.apply_attention_decode(
-                    p["mixer"], h, cfg, policy, state, cache_pos)
+                if isinstance(state, attn.PagedKVCache):
+                    out, new_state = attn.apply_attention_decode_paged(
+                        p["mixer"], h, cfg, policy, state, cache_pos,
+                        page_table)
+                else:
+                    out, new_state = attn.apply_attention_decode(
+                        p["mixer"], h, cfg, policy, state, cache_pos)
             elif mode == "prefill":
                 out, new_state = attn.apply_attention_prefill(
                     p["mixer"], h, cfg, policy, state)
@@ -193,7 +205,7 @@ def _remat_wrap(fn, remat: str):
 
 
 def _scan_segment(slots, x, sb_start, sb_end, cfg, policy, remat="nothing",
-                  mode="train", states=None, cache_pos=None):
+                  mode="train", states=None, cache_pos=None, page_table=None):
     """Run super-blocks [sb_start, sb_end). Returns (x, aux, new_states)."""
     if sb_end == sb_start:
         return x, jnp.zeros((), jnp.float32), states
@@ -212,7 +224,8 @@ def _scan_segment(slots, x, sb_start, sb_end, cfg, policy, remat="nothing",
         for j, spec in enumerate(cfg.block_pattern):
             st = slot_states[j] if has_state else None
             x, a, ns = _apply_layer(slot_params[j], x, spec, cfg, policy,
-                                    state=st, mode=mode, cache_pos=cache_pos)
+                                    state=st, mode=mode, cache_pos=cache_pos,
+                                    page_table=page_table)
             aux = aux + a
             new_states.append(ns)
         out = tuple(new_states) if has_state else None
@@ -405,6 +418,100 @@ def slot_lengths(cache: LMCache) -> jax.Array:
     return cache.pos
 
 
+# ----- paged cache API (paged KV serve engine) -------------------------------
+#
+# Attention KV moves from per-slot contiguous [B, ..., max_len, ...] rows to
+# fixed-size PAGES: each attention layer owns a pool ([P, Hkv, ps, D] /
+# [P, ps, lora]) and one [capacity, max_pages] page table (shared by all
+# layers — every layer of a sequence uses the same logical page ids) maps
+# slot-local page index j to the pool page holding positions
+# [j*ps, (j+1)*ps). Page 0 is a reserved scratch page (dead-slot writes).
+# Recurrent mixer states (Mamba conv/ssm, xLSTM) are O(1) per slot and stay
+# slot-indexed. The host owns allocation (serve/paging.py): the table is
+# DATA to the jitted decode step, so page churn never re-traces.
+
+
+class PagedLMCache(NamedTuple):
+    prefix: Tuple            # per prefix layer state (paged for attn)
+    slots: Tuple             # per slot: stacked [n_sb, ...] states
+    pos: jax.Array           # [B] int32 current lengths
+    page_table: jax.Array    # [B, max_pages] int32; -1 = unallocated
+
+
+def _init_layer_state_paged(spec: BlockSpec, cfg: ArchConfig, batch: int,
+                            num_pages: int, page_size: int, dtype):
+    if spec.mixer == "attn":
+        if cfg.mla is not None:
+            return attn.init_paged_mla_cache(cfg, num_pages, page_size, dtype)
+        return attn.init_paged_kv_cache(cfg, num_pages, page_size, dtype)
+    return _init_layer_state(spec, cfg, batch, 0, dtype)
+
+
+def init_paged_cache(cfg: ArchConfig, batch: int, max_len: int,
+                     page_size: int, num_pages: int) -> PagedLMCache:
+    dtype = jnp.dtype(cfg.dtype)
+    max_pages = -(-max_len // page_size)
+    prefix = tuple(
+        _init_layer_state_paged(cfg.layer_spec(i), cfg, batch, num_pages,
+                                page_size, dtype)
+        for i in range(cfg.first_k_dense))
+    n_sb = cfg.num_superblocks
+    slots = []
+    for spec in cfg.block_pattern:
+        one = _init_layer_state_paged(spec, cfg, batch, num_pages,
+                                      page_size, dtype)
+        slots.append(jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (n_sb, *a.shape)).copy(), one))
+    return PagedLMCache(
+        prefix=prefix, slots=tuple(slots),
+        pos=jnp.zeros((batch,), jnp.int32),
+        page_table=jnp.full((batch, max_pages), -1, jnp.int32))
+
+
+def _state_fill_paged(state, src, slot, page_ids, stacked: bool):
+    if isinstance(state, (attn.PagedKVCache, attn.PagedMLACache)):
+        return attn.fill_pages(state, src, page_ids, stacked)
+    return _state_fill(state, src, slot, axis=1 if stacked else 0)
+
+
+def fill_slot_paged(cache: PagedLMCache, src: LMCache, slot, length,
+                    page_ids: jax.Array) -> PagedLMCache:
+    """Admit a batch-1 contiguous prefill into row ``slot``: attention KV is
+    scattered into the host-allocated ``page_ids`` (one per bucket page, in
+    position order), recurrent states land in the slot row as before. The
+    slot's page-table row is rewritten to exactly these pages."""
+    n_pages = page_ids.shape[0]
+    new_prefix = tuple(
+        _state_fill_paged(c, s, slot, page_ids, stacked=False)
+        for c, s in zip(cache.prefix, src.prefix))
+    new_slots = tuple(
+        _state_fill_paged(c, s, slot, page_ids, stacked=True)
+        for c, s in zip(cache.slots, src.slots))
+    row = jnp.full((cache.page_table.shape[1],), -1,
+                   jnp.int32).at[:n_pages].set(page_ids.astype(jnp.int32))
+    return PagedLMCache(
+        new_prefix, new_slots,
+        cache.pos.at[slot].set(jnp.asarray(length, jnp.int32)),
+        cache.page_table.at[slot].set(row))
+
+
+def free_slot_paged(cache: PagedLMCache, slot) -> PagedLMCache:
+    """Retire row ``slot``: zero its length, recurrent state and page-table
+    row. Pool pages keep their bytes — junk is masked at read time by the
+    per-page validity test, so no zeroing pass is needed on reuse."""
+    def reset_recurrent(state, stacked):
+        if isinstance(state, (attn.PagedKVCache, attn.PagedMLACache)):
+            return state
+        return _state_reset(state, slot, axis=1 if stacked else 0)
+
+    new_prefix = tuple(reset_recurrent(c, False) for c in cache.prefix)
+    new_slots = tuple(reset_recurrent(c, True) for c in cache.slots)
+    return PagedLMCache(
+        new_prefix, new_slots, cache.pos.at[slot].set(0),
+        cache.page_table.at[slot].set(
+            jnp.full((cache.page_table.shape[1],), -1, jnp.int32)))
+
+
 def forward_prefill(params, inputs, cfg: ArchConfig, policy: xaif.PolicyLike,
                     cache: LMCache, lengths: Optional[jax.Array] = None):
     """Full-sequence prefill filling caches; returns (last_logits, cache).
@@ -437,11 +544,15 @@ def forward_prefill(params, inputs, cfg: ArchConfig, policy: xaif.PolicyLike,
 
 
 def forward_decode(params, tokens, cfg: ArchConfig, policy: xaif.PolicyLike,
-                   cache: LMCache, with_exits: bool = True):
+                   cache, with_exits: bool = True):
     """One decode step. tokens [B, 1] (or [B, 1, d] embeddings).
 
-    Returns (final_logits [B, V], exit_logits tuple, new_cache).
+    ``cache`` is an LMCache (contiguous per-slot KV) or a PagedLMCache
+    (page-pool KV attended via the page table — same numerics, page-granular
+    memory). Returns (final_logits [B, V], exit_logits tuple, new_cache).
     """
+    paged = isinstance(cache, PagedLMCache)
+    page_table = cache.page_table if paged else None
     x = _embed(params, tokens, cfg)
     cache_pos = cache.pos
     exit_lg: List[jax.Array] = []
@@ -452,7 +563,7 @@ def forward_decode(params, tokens, cfg: ArchConfig, policy: xaif.PolicyLike,
     for i in range(cfg.first_k_dense):
         x, _, ns = _apply_layer(params["prefix"][i], x, cfg.layer_spec(i), cfg,
                                 policy, state=cache.prefix[i], mode="decode",
-                                cache_pos=cache_pos)
+                                cache_pos=cache_pos, page_table=page_table)
         new_prefix.append(ns)
         if (i + 1) in exit_points:
             exit_lg.append(_exit_logits(params, x, exit_points[i + 1], cfg,
@@ -461,7 +572,7 @@ def forward_decode(params, tokens, cfg: ArchConfig, policy: xaif.PolicyLike,
     for sb_start, sb_end, exit_i in _segments(cfg):
         x, _, seg_states = _scan_segment(
             params["slots"], x, sb_start, sb_end, cfg, policy, mode="decode",
-            states=cache.slots, cache_pos=cache_pos)
+            states=cache.slots, cache_pos=cache_pos, page_table=page_table)
         if sb_end > sb_start:
             new_slots = jax.tree_util.tree_map(
                 lambda full, seg: jax.lax.dynamic_update_slice_in_dim(
@@ -470,7 +581,11 @@ def forward_decode(params, tokens, cfg: ArchConfig, policy: xaif.PolicyLike,
         if exit_i is not None and (with_exits and cfg.early_exit is not None):
             exit_lg.append(_exit_logits(params, x, exit_i, cfg, policy)[:, 0])
     logits = _head(params, x, cfg, policy)[:, 0]
-    new_cache = LMCache(tuple(new_prefix), new_slots, cache.pos + 1)
+    if paged:
+        new_cache = PagedLMCache(tuple(new_prefix), new_slots, cache.pos + 1,
+                                 cache.page_table)
+    else:
+        new_cache = LMCache(tuple(new_prefix), new_slots, cache.pos + 1)
     return logits, tuple(exit_lg), new_cache
 
 

@@ -16,6 +16,28 @@ Continuous batching (the tentpole of this layer):
     path (``gated=True`` → ``forward_decode_gated``'s lax.cond skip with
     CALM KV propagation) on attention-only single-exit archs.
 
+Paged KV (``paged=True``) replaces the per-slot contiguous ``max_len`` KV
+rows with fixed-size pages — capacity becomes "tokens actually resident",
+not "slots x max_len". Page-pool invariants (host side enforced by
+``serve/paging.py``, device side by construction):
+
+  * each attention layer owns a pool ``[num_pages, Hkv, ps, D]`` (MLA:
+    ``[num_pages, ps, lora]``); ONE ``[capacity, max_pages]`` page table is
+    shared by every layer — a sequence's logical page j maps to the same
+    pool index in all of them;
+  * page 0 is the reserved SCRATCH page: never allocated; appends from
+    done/empty slots (whose table entry is -1) are routed there and its
+    contents are never validly read;
+  * live slots own disjoint page sets; a retired slot's pages return to
+    the free list UNZEROED — junk is masked at read time by the per-page
+    validity test (table entry >= 0) and the per-slot length, so reuse
+    needs no zeroing pass;
+  * the page table is DATA to the jitted decode chunk (traced shape
+    ``[capacity, max_pages]``): admission, on-demand growth between chunks
+    and retirement rewrite it without re-tracing;
+  * admission reserves each request's worst-case page count, so the
+    scheduler's on-demand growth before a chunk can never run dry.
+
 The legacy ``generate`` remains the reference loop (tests compare the slot
 engine against it token-for-token); its per-token ``float(info[k])`` host
 sync is fixed — statistics stay on device until one fetch at the end.
@@ -185,6 +207,35 @@ def make_prefill_slot(run: RunConfig, bucket_len: int):
     return prefill_slot
 
 
+def make_prefill_slot_paged(run: RunConfig, bucket_len: int,
+                            page_size: int):
+    """Paged admission: contiguous batch-1 prefill -> page scatter.
+
+    The prefill compute is unchanged (a bucketed contiguous batch-1 cache);
+    ``lm.fill_slot_paged`` scatters the produced KV into the host-allocated
+    ``page_ids`` (traced [bucket_pages] i32 — any page assignment reuses
+    the one trace per bucket)."""
+    cfg, policy = run.arch, run.accel
+
+    def prefill_slot(params, cache, st: DecodeState, tokens, true_len, slot,
+                     max_new, page_ids):
+        slot_cache = lm.init_cache(cfg, 1, bucket_len)
+        logits, slot_cache = lm.forward_prefill(
+            params, tokens, cfg, policy, slot_cache,
+            lengths=true_len[None])
+        tok0 = jnp.argmax(logits[0], axis=-1).astype(jnp.int32)
+        cache = lm.fill_slot_paged(cache, slot_cache, slot, true_len,
+                                   page_ids)
+        st = st._replace(
+            tokens=st.tokens.at[slot].set(tok0),
+            done=st.done.at[slot].set(max_new <= 1),
+            generated=st.generated.at[slot].set(1),
+            budget=st.budget.at[slot].set(max_new))
+        return cache, st, tok0
+
+    return prefill_slot
+
+
 def make_decode_chunk(run: RunConfig, steps: int, gated: bool = False):
     """One jitted lax.scan of ``steps`` decode steps over the slot batch.
 
@@ -259,21 +310,41 @@ class SlotEngine:
     with recurrent mixers (Mamba/xLSTM) prefill at EXACT length — pad
     tokens would be folded into the recurrence — at the cost of one trace
     per distinct prompt length.
+
+    ``paged``: store attention KV as fixed-size pages (``page_size``) from
+    a pool of ``num_pages`` (default: the contiguous engine's worst case,
+    capacity x ceil(max_len/page_size), + 1 scratch page — shrink it to
+    trade worst-case headroom for admission concurrency). Token identity
+    with the contiguous engine holds bitwise when page_size divides
+    max_len (equal attended extents); the gated early-exit path is not yet
+    page-aware.
     """
 
     def __init__(self, run: RunConfig, capacity: int, max_len: int,
-                 chunk: int = 8, gated: bool = False, prompt_bucket: int = 16):
+                 chunk: int = 8, gated: bool = False, prompt_bucket: int = 16,
+                 paged: bool = False, page_size: int = 16,
+                 num_pages: Optional[int] = None):
         cfg = run.arch
         if gated:
             assert (cfg.early_exit is not None
                     and len(cfg.early_exit.exit_layers) == 1
                     and all(b.mixer == "attn" for b in cfg.block_pattern)), \
                 "gated decode needs an attention-only single-exit arch"
+        assert not (gated and paged), \
+            "gated decode is not page-aware yet (ROADMAP follow-up)"
         self.run = run
         self.capacity = capacity
         self.max_len = max_len
         self.chunk = chunk
         self.gated = gated
+        self.paged = paged
+        self.page_size = page_size
+        self.max_pages = -(-max_len // page_size)
+        self.num_pages = (num_pages if num_pages is not None
+                          else capacity * self.max_pages + 1)
+        if paged:
+            assert self.num_pages >= self.max_pages + 1, \
+                "page pool cannot hold even one max-length request"
         # prefix layers inherit their mixer from the pattern, so all-attn
         # patterns are pad-safe end to end; recurrent mixers are not
         self.pad_prompts = all(b.mixer == "attn" for b in cfg.block_pattern)
@@ -291,10 +362,16 @@ class SlotEngine:
 
     # -- device state ------------------------------------------------------
 
-    def init_state(self) -> Tuple[lm.LMCache, DecodeState]:
+    def init_state(self):
         # jitted so every leaf is a DISTINCT device buffer — eagerly built
         # zero caches can alias identical constants, which breaks donation
         # (same workaround as the trainer's init; see trainer.py)
+        if self.paged:
+            return jax.jit(lambda: (
+                lm.init_paged_cache(self.run.arch, self.capacity,
+                                    self.max_len, self.page_size,
+                                    self.num_pages),
+                init_decode_state(self.capacity)))()
         return jax.jit(lambda: (
             lm.init_cache(self.run.arch, self.capacity, self.max_len),
             init_decode_state(self.capacity)))()
@@ -306,22 +383,63 @@ class SlotEngine:
         return min(-(-t // b) * b, self.max_len)
 
     def prefill_into(self, params, cache, st, prompt, slot: int,
-                     max_new: int):
+                     max_new: int, page_ids=None):
         """Admit one request: bucketed batch-1 prefill into ``slot``.
-        prompt: 1-D int32 array/list. Returns (cache, st, first_token)."""
+        prompt: 1-D int32 array/list. Paged engines additionally take the
+        host-allocated ``page_ids`` (one per bucket page, position order).
+        Returns (cache, st, first_token)."""
         prompt = jnp.asarray(prompt, jnp.int32)
         t = int(prompt.shape[0])
         assert t + max_new <= self.max_len, (t, max_new, self.max_len)
+        assert (page_ids is not None) == self.paged, \
+            "page_ids required iff the engine is paged"
         bucket = self._bucket(t)
         if bucket not in self._prefill:
             self.prefill_traces += 1
-            self._prefill[bucket] = jax.jit(
-                make_prefill_slot(self.run, bucket),
-                donate_argnums=(1, 2))
+            make = (make_prefill_slot_paged(self.run, bucket, self.page_size)
+                    if self.paged else make_prefill_slot(self.run, bucket))
+            self._prefill[bucket] = jax.jit(make, donate_argnums=(1, 2))
         padded = jnp.zeros((1, bucket), jnp.int32).at[0, :t].set(prompt)
-        return self._prefill[bucket](
-            params, cache, st, padded, jnp.asarray(t, jnp.int32),
-            jnp.asarray(slot, jnp.int32), jnp.asarray(max_new, jnp.int32))
+        args = (params, cache, st, padded, jnp.asarray(t, jnp.int32),
+                jnp.asarray(slot, jnp.int32), jnp.asarray(max_new, jnp.int32))
+        if self.paged:
+            n_bucket = -(-bucket // self.page_size)
+            assert page_ids.shape == (n_bucket,), (page_ids.shape, n_bucket)
+            args = args + (jnp.asarray(page_ids, jnp.int32),)
+        return self._prefill[bucket](*args)
+
+    # -- paged page-table sync ---------------------------------------------
+
+    def set_page_table(self, cache, table) -> "lm.PagedLMCache":
+        """Push the host mirror of the page table to the device cache
+        (between chunks — the table is data, never trace shape)."""
+        assert self.paged
+        return cache._replace(page_table=jnp.asarray(table, jnp.int32))
+
+    def kv_bytes(self, cache=None) -> int:
+        """Total bytes of attention KV storage (pools or contiguous rows).
+
+        Sizes are static, so with no ``cache`` the tree is built with
+        ``jax.eval_shape`` — no device allocation."""
+        import math
+        from repro.models.attention import (KVCache, MLACache, PagedKVCache,
+                                            PagedMLACache)
+        if cache is None:
+            cache, _ = jax.eval_shape(
+                lambda: (lm.init_paged_cache(self.run.arch, self.capacity,
+                                             self.max_len, self.page_size,
+                                             self.num_pages)
+                         if self.paged else
+                         lm.init_cache(self.run.arch, self.capacity,
+                                       self.max_len),
+                         init_decode_state(self.capacity)))
+        total = 0
+        for state in tuple(cache.prefix) + tuple(cache.slots):
+            if isinstance(state, (KVCache, MLACache, PagedKVCache,
+                                  PagedMLACache)):
+                total += sum(math.prod(a.shape) * a.dtype.itemsize
+                             for a in state)
+        return total
 
     # -- decode ------------------------------------------------------------
 

@@ -5,6 +5,18 @@ free slots (one bucketed prefill each), decode advances ALL occupied slots
 in jitted chunks, and finished slots are retired and backfilled without
 re-tracing — the decode graph is compiled once per capacity.
 
+With a PAGED engine, admission is by free PAGES rather than free slots
+alone (a short request no longer strands a worst-case ``max_len`` KV row),
+pages are grown on demand between decode chunks (covered by the admission
+reservation, so growth never fails) and retirement returns a request's
+pages to the free list. All of it is host bookkeeping over
+``serve.paging.PageAllocator``; the device page table is pushed once per
+chunk when dirty.
+
+Prompts that cannot fit (``len(prompt) + max_new_tokens > max_len``) are
+REJECTED — ``Request.reject_reason`` is set and the request is returned to
+the caller unserved, never silently truncated.
+
 The host's only per-chunk work is one fetch of (tokens, slot state) and the
 free-list bookkeeping; token validity is reconstructed from the per-slot
 generated counts, so no device round-trip happens inside the token loop.
@@ -19,6 +31,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.serve.engine import SlotEngine
+from repro.serve.paging import PageAllocator
 
 
 @dataclass
@@ -31,6 +44,7 @@ class Request:
     # lifecycle (filled by the scheduler)
     t_admitted: Optional[float] = None
     t_finished: Optional[float] = None
+    reject_reason: Optional[str] = None
     tokens: List[int] = field(default_factory=list)
 
     @property
@@ -46,14 +60,31 @@ class ServeReport:
     stats: Dict[str, float]
 
     @property
+    def served(self) -> List[Request]:
+        return [r for r in self.requests if r.reject_reason is None]
+
+    @property
+    def rejected(self) -> List[Request]:
+        return [r for r in self.requests if r.reject_reason is not None]
+
+    @property
     def tokens_per_s(self) -> float:
         return self.decode_tokens / max(self.wall_s, 1e-9)
 
     def latency_percentiles(self) -> Dict[str, float]:
-        lats = np.asarray([r.latency for r in self.requests])
+        lats = np.asarray([r.latency for r in self.served])
+        if lats.size == 0:                   # every request was rejected
+            nan = float("nan")
+            return {"p50": nan, "p99": nan, "mean": nan}
         return {"p50": float(np.percentile(lats, 50)),
                 "p99": float(np.percentile(lats, 99)),
                 "mean": float(np.mean(lats))}
+
+
+# admit() outcomes
+ADMITTED = "admitted"
+FULL = "full"          # retry when a slot / pages free up
+REJECTED = "rejected"  # can never be served by this engine
 
 
 class SlotScheduler:
@@ -66,28 +97,77 @@ class SlotScheduler:
         self.free: deque = deque(range(engine.capacity))
         self.occupant: Dict[int, Request] = {}       # slot -> request
         self._gen_seen: Dict[int, int] = {}          # slot -> tokens recorded
+        self._true_len: Dict[int, int] = {}          # slot -> prompt length
+        self.alloc: Optional[PageAllocator] = None
+        if engine.paged:
+            self.alloc = PageAllocator(engine.num_pages, engine.capacity,
+                                       engine.max_pages, engine.page_size)
+        self.max_concurrency = 0                     # peak occupied slots
 
     # -- admission ---------------------------------------------------------
 
-    def admit(self, req: Request, now: float) -> bool:
-        """Prefill ``req`` into a free slot. False when at capacity."""
+    def admit(self, req: Request, now: float) -> str:
+        """Prefill ``req`` into a free slot. Returns ADMITTED, FULL (at
+        capacity — retry later) or REJECTED (impossible request — the
+        caller gets it back with ``reject_reason`` set, NOT truncated)."""
+        t = int(req.prompt.shape[0])
+        if t + req.max_new_tokens > self.engine.max_len:
+            req.reject_reason = (
+                f"prompt ({t}) + max_new_tokens ({req.max_new_tokens}) "
+                f"exceeds engine max_len ({self.engine.max_len})")
+            return REJECTED
         if not self.free:
-            return False
-        slot = self.free.popleft()
+            return FULL
+        bucket = self.engine._bucket(t)
+        page_ids = None
+        if self.alloc is not None:
+            if not self.alloc.can_admit(bucket, t, req.max_new_tokens):
+                return FULL                          # admission by free pages
+            slot = self.free.popleft()
+            page_ids = self.alloc.admit(slot, bucket, t, req.max_new_tokens)
+        else:
+            slot = self.free.popleft()
         self.cache, self.state, tok0 = self.engine.prefill_into(
             self.params, self.cache, self.state, req.prompt, slot,
-            req.max_new_tokens)
+            req.max_new_tokens, page_ids=page_ids)
+        # (the jitted fill wrote this slot's device table row; any OTHER
+        # pending mirror changes — e.g. rows cleared by release() — keep
+        # alloc.dirty set and are pushed before the next decode chunk.
+        # That push must land before a freed page is re-read: a retired
+        # slot's stale device row would otherwise route its dead-slot
+        # appends into a page that now belongs to someone else.)
         req.t_admitted = now
         req.tokens.append(int(tok0))                 # per-REQUEST fetch
         self.occupant[slot] = req
         self._gen_seen[slot] = 1
-        return True
+        self._true_len[slot] = t
+        self.max_concurrency = max(self.max_concurrency, len(self.occupant))
+        return ADMITTED
 
     # -- decode + retire ---------------------------------------------------
+
+    def _grow_pages(self) -> None:
+        """On-demand page allocation before a chunk: every live slot gets
+        coverage for the positions this chunk will write (reservation-backed,
+        so the pops cannot fail)."""
+        chunk = self.engine.chunk
+        for slot, req in self.occupant.items():
+            gen = self._gen_seen[slot]
+            live_steps = min(chunk, req.max_new_tokens - gen)
+            if live_steps <= 0:
+                continue                              # done: appends pinned
+            pos_now = self._true_len[slot] + gen - 1
+            self.alloc.ensure(slot, pos_now + live_steps - 1)
+        if self.alloc.dirty:
+            self.cache = self.engine.set_page_table(self.cache,
+                                                    self.alloc.table)
+            self.alloc.dirty = False
 
     def step_chunk(self, now: float) -> int:
         """One jitted decode chunk + ONE host fetch; retire finished slots.
         Returns the number of valid tokens produced this chunk."""
+        if self.alloc is not None:
+            self._grow_pages()
         self.cache, self.state, toks = self.engine.decode(
             self.params, self.cache, self.state)
         # the single per-chunk host transfer:
@@ -106,6 +186,9 @@ class SlotScheduler:
                 req.t_finished = max(now, req.arrival)
                 del self.occupant[slot]
                 del self._gen_seen[slot]
+                del self._true_len[slot]
+                if self.alloc is not None:
+                    self.alloc.release(slot)         # pages -> free list
                 self.free.append(slot)               # backfill: host-only
         return produced
 
@@ -121,7 +204,8 @@ def serve(engine: SlotEngine, params, requests: List[Request],
     ``realtime=False`` (benchmarks) admits requests as soon as a slot frees
     up, ignoring arrival times for *admission* but still charging queueing
     delay against them via the serve clock. ``realtime=True`` waits for
-    wall-clock arrivals (the Poisson simulator).
+    wall-clock arrivals (the Poisson simulator). Requests the engine can
+    never serve come back with ``reject_reason`` set.
     """
     waiting = deque(sorted(requests, key=lambda r: r.arrival))
     t0 = time.perf_counter()
@@ -133,24 +217,33 @@ def serve(engine: SlotEngine, params, requests: List[Request],
 
     while waiting or sched.busy:
         # admit everything currently admissible
+        progressed = False
         while waiting and sched.free:
             if realtime and waiting[0].arrival > now():
                 break
             req = waiting[0]
-            if not sched.admit(req, max(now(), req.arrival)):
+            res = sched.admit(req, max(now(), req.arrival))
+            if res == FULL:
                 break
-            waiting.popleft()
+            progressed = True
+            waiting.popleft()                        # ADMITTED or REJECTED
         if not sched.busy:
             if realtime and waiting:
                 time.sleep(max(waiting[0].arrival - now(), 0.0))
                 continue
-            break
+            if not progressed:
+                break        # nothing running, nothing admissible: done
+            continue
         decode_tokens += sched.step_chunk(now())
     wall = now()
     # prefill-produced first tokens count toward throughput too
     total = decode_tokens + sum(1 for r in requests if r.tokens)
+    stats = SlotEngine.stats(sched.state)
+    stats["max_concurrency"] = float(sched.max_concurrency)
+    if sched.alloc is not None:
+        stats["peak_pages"] = float(sched.alloc.peak_pages)
     return ServeReport(requests=requests, wall_s=wall, decode_tokens=total,
-                       stats=SlotEngine.stats(sched.state))
+                       stats=stats)
 
 
 def poisson_requests(num: int, rate_hz: float, prompt_lens,
