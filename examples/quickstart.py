@@ -17,6 +17,16 @@ retired slots — returning their pages to the pool — without re-compiling.
 Decode is token-identical to the contiguous engine. ``repro.launch.serve``
 wraps the same path in a Poisson request-stream simulator (--paged).
 
+Serve on a MESH: pass ``SlotEngine(..., mesh=jax.make_mesh((dp, tp),
+("data", "model")), sharding=ShardingPolicy(fsdp=False))`` — every jitted
+entry point is built with explicit in/out shardings (params tp-sharded,
+the cache's slot axis over the data axes, page pools head-sharded) and
+greedy tokens stay identical to the single-device engine. From the CLI:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m repro.launch.serve --arch yi-9b \
+        --mesh dp=2,model=2 [--temperature 0.8 --top-k 40]
+
     PYTHONPATH=src python examples/quickstart.py [--arch yi-9b] [--steps 30]
 """
 import argparse

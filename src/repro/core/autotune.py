@@ -114,6 +114,32 @@ def _ssm_cell(t: int, batch: int = 2, din: int = 32, n: int = 8):
     return build
 
 
+def _attn_decode_cell(s: int, batch: int = 4, hq: int = 4, hkv: int = 2,
+                      d: int = 32, mla_rope_dim: int = 0):
+    """One attn_decode cell: ``batch`` sequences of staggered lengths over a
+    contiguous [B, Hkv, s, D] cache. ``mla_rope_dim`` > 0 builds the MLA
+    absorbed-decode call (hkv must be 1, precise fp32 post-scale, rotary
+    second score component)."""
+    def build(scale: int):
+        q = jax.random.normal(_key(0), (batch, hq, d), jnp.float32)
+        k = jax.random.normal(_key(1), (batch, hkv, s, d), jnp.float32)
+        v = jax.random.normal(_key(2), (batch, hkv, s, d), jnp.float32)
+        pos = (jnp.arange(batch, dtype=jnp.int32) * (s // 4) + s // 2) % s
+        kwargs = {}
+        if mla_rope_dim:
+            assert hkv == 1
+            kwargs = {
+                "scale": (d + mla_rope_dim) ** -0.5,
+                "q2": jax.random.normal(_key(3), (batch, hq, mla_rope_dim),
+                                        jnp.float32),
+                "k2": jax.random.normal(
+                    _key(4), (batch, 1, s, mla_rope_dim), jnp.float32),
+                "precise": True,
+            }
+        return (q, k, v, pos), kwargs
+    return build
+
+
 def _paged_attn_cell(np_pages: int, batch: int = 4, hq: int = 4,
                      hkv: int = 2, d: int = 32, ps: int = 16,
                      mla_rope_dim: int = 0):
@@ -158,15 +184,13 @@ def _paged_attn_cell(np_pages: int, batch: int = 4, hq: int = 4,
 # after the fact need a cell passed via ``autotune(cells=...)`` or they are
 # reported (not silently skipped).
 #
-# Serving caveat: the decode step's attention/recurrence is computed INLINE
-# by the cached decode paths (models/attention.py apply_*_decode,
-# models/mamba.py) — they do not dispatch "attention"/"ssm_scan" through
-# xaif, so those two decode cells tune any direct xaif.call at decode
-# shapes (benchmarks, prefill with T=1), not the serve engine's decode
-# mixers. The decode-relevant serving cells are the row-op ones
-# (gemm/rmsnorm/entropy rows_s): every projection, norm and exit check in
-# the decode step dispatches through them. Routing the cached decode
-# mixers through XAIF is a ROADMAP follow-up.
+# Serving note: BOTH engines' decode attention now dispatches through XAIF
+# — "attn_decode" is the contiguous slot engine's cached mixer (GQA and
+# MLA absorbed decode) and "attn_decode_paged" the paged engine's — so a
+# tuned policy applies to the real serve decode path, alongside the row
+# ops (gemm/rmsnorm/entropy rows_s) every projection / norm / exit check
+# dispatches through. Only the Mamba/xLSTM decode recurrences remain
+# inline (ROADMAP follow-up).
 CELLS: Dict[Tuple[str, str], Callable] = {
     ("gemm", "rows_s"): _gemm_cell(8),
     ("gemm", "rows_m"): _gemm_cell(256),
@@ -181,6 +205,8 @@ CELLS: Dict[Tuple[str, str], Callable] = {
     ("attention", "prefill"): _attention_cell(128),
     ("ssm_scan", "decode"): _ssm_cell(1),
     ("ssm_scan", "scan"): _ssm_cell(128),
+    ("attn_decode", "kv_s"): _attn_decode_cell(128),
+    ("attn_decode", "kv_l"): _attn_decode_cell(2048),
     ("attn_decode_paged", "kv_s"): _paged_attn_cell(8),     # 8*16  = 128 kv
     ("attn_decode_paged", "kv_l"): _paged_attn_cell(128),   # 128*16 = 2048
 }
@@ -251,14 +277,20 @@ def arch_cells(cfg, *, capacity: int = 8, bucket_len: int = 64,
         ("attention", "prefill"): attention(bucket_len, bucket_len),
     }
     np_ = -(-max_len // page_size)
-    paged_bucket = "kv_s" if np_ * page_size <= 1024 else "kv_l"
+    kv_extent = np_ * page_size
+    kv_bucket = "kv_s" if kv_extent <= 1024 else "kv_l"
     if cfg.mla is None:
-        cells[("attn_decode_paged", paged_bucket)] = _paged_attn_cell(
+        cells[("attn_decode_paged", kv_bucket)] = _paged_attn_cell(
             np_, batch=rows_s, hq=hq, hkv=hkv, d=hd, ps=page_size)
+        cells[("attn_decode", kv_bucket)] = _attn_decode_cell(
+            kv_extent, batch=rows_s, hq=hq, hkv=hkv, d=hd)
     else:
-        cells[("attn_decode_paged", paged_bucket)] = _paged_attn_cell(
+        cells[("attn_decode_paged", kv_bucket)] = _paged_attn_cell(
             np_, batch=rows_s, hq=hq, hkv=1, d=cfg.mla.kv_lora_rank,
             ps=page_size, mla_rope_dim=cfg.mla.qk_rope_head_dim)
+        cells[("attn_decode", kv_bucket)] = _attn_decode_cell(
+            kv_extent, batch=rows_s, hq=hq, hkv=1, d=cfg.mla.kv_lora_rank,
+            mla_rope_dim=cfg.mla.qk_rope_head_dim)
     if cfg.mamba is not None:
         from repro.models.mamba import _dims
         d_inner, _, n_state = _dims(cfg)
@@ -287,6 +319,9 @@ def _cost_args(op: str, shapes) -> Optional[tuple]:
         if op == "attention":
             q, k = shapes[0], shapes[1]
             return (q[0], q[1], q[2], k[2], q[3])
+        if op == "attn_decode":
+            q, ks = shapes[0], shapes[1]
+            return (q[0], q[1], ks[2], q[2])
         if op == "attn_decode_paged":
             q, kp, pt = shapes[0], shapes[1], shapes[3]
             return (q[0], q[1], pt[1], kp[2], q[2])

@@ -162,12 +162,20 @@ def _paged_bucket(shapes, _dtype):
     return "kv_s" if s <= 1024 else "kv_l"
 
 
+def _decode_kv_bucket(shapes, _dtype):
+    # (q [B,Hq,D], k [B,Hkv,S,D], v, cache_pos): bucket by the contiguous
+    # KV extent S — same boundary as the paged op, so a policy tuned for
+    # one engine transfers its bucket structure to the other
+    return "kv_s" if int(shapes[1][2]) <= 1024 else "kv_l"
+
+
 _BUCKET_FNS: Dict[str, Callable] = {
     "gemm": _rows_bucket,
     "rmsnorm": _rows_bucket,
     "entropy_exit": _rows_bucket,
     "attention": _attention_bucket,
     "ssm_scan": _ssm_bucket,
+    "attn_decode": _decode_kv_bucket,
     "attn_decode_paged": _paged_bucket,
 }
 
@@ -177,6 +185,7 @@ _OP_BUCKETS: Dict[str, Tuple[str, ...]] = {
     "entropy_exit": ("rows_s", "rows_m", "rows_l"),
     "attention": ("decode", "prefill"),
     "ssm_scan": ("decode", "scan"),
+    "attn_decode": ("kv_s", "kv_l"),
     "attn_decode_paged": ("kv_s", "kv_l"),
 }
 
@@ -454,4 +463,5 @@ def _ensure_builtin_backends():
     from repro.kernels.entropy_exit import ops as _entropy_ops   # noqa: F401
     from repro.kernels.flash_attention import ops as _fa_ops     # noqa: F401
     from repro.kernels.ssm_scan import ops as _ssm_ops           # noqa: F401
+    from repro.kernels.attn_decode import ops as _decode_ops     # noqa: F401
     from repro.kernels.paged_attention import ops as _paged_ops  # noqa: F401

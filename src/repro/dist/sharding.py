@@ -213,12 +213,26 @@ def cache_shardings(tree: Any, batch: int) -> Any:
     batch size can never be sharded by accident. Pre-sliced sub-trees
     (per-layer states, as the dry-run's component costing passes) carry
     batch at axis 0; a size match on a later axis is only a fallback.
+
+    PagedLMCache trees have NO batch dimension in their attention storage —
+    the page pools are shared across slots — so the pools shard their
+    capacity-agnostic HEAD dim over ``tp`` (GQA ``[.., P, Hkv, ps, D]``
+    pools; decode attention is head-parallel, so this needs no collective),
+    the MLA latent pools stay replicated (their single shared head has no
+    head axis and the lora width is a decode-score contraction dim — see
+    below), and the ``[capacity, max_pages]`` page table is replicated (it
+    is rewritten wholesale from the host mirror between chunks). Recurrent
+    slot states and ``pos`` shard over the data axes exactly like the
+    contiguous cache.
     """
     ctx = current_ctx()
     assert ctx is not None, "cache_shardings requires an active shard_ctx"
     ba = ctx.axis("batch") if ctx.policy.shard_kv_batch else None
     if ba is not None and batch % ctx.size(ba) != 0:
         ba = None
+
+    def replicated(s):
+        return NamedSharding(ctx.mesh, P(*([None] * len(s.shape))))
 
     def leaf_at(axis):
         def leaf(s):
@@ -234,6 +248,33 @@ def cache_shardings(tree: Any, batch: int) -> Any:
             slots=jax.tree_util.tree_map(leaf_at(1), tree.slots),
             pos=leaf_at(0)(tree.pos))
 
+    if type(tree).__name__ == "PagedLMCache":
+        ta = ctx.axis("tp")
+
+        def pool_or_state(state, stacked: bool):
+            name = type(state).__name__
+            if name == "PagedKVCache":
+                # [(n_sb,) P, Hkv, ps, D]: heads over tp when they divide
+                def pool_leaf(s):
+                    spec: list = [None] * len(s.shape)
+                    if ta is not None and s.shape[-3] % ctx.size(ta) == 0:
+                        spec[-3] = ta
+                    return NamedSharding(ctx.mesh, P(*spec))
+                return jax.tree_util.tree_map(pool_leaf, state)
+            if name == "PagedMLACache":
+                # one shared latent "head"; sharding the lora width would
+                # turn the absorbed-decode score dot into a cross-device
+                # partial sum (and break bitwise identity) — replicate
+                return jax.tree_util.tree_map(replicated, state)
+            return jax.tree_util.tree_map(leaf_at(1 if stacked else 0),
+                                          state)
+
+        return type(tree)(
+            prefix=tuple(pool_or_state(s, False) for s in tree.prefix),
+            slots=tuple(pool_or_state(s, True) for s in tree.slots),
+            pos=leaf_at(0)(tree.pos),
+            page_table=replicated(tree.page_table))
+
     def leaf(s):
         spec: list = [None] * len(s.shape)
         if ba is not None:
@@ -247,3 +288,22 @@ def cache_shardings(tree: Any, batch: int) -> Any:
         return NamedSharding(ctx.mesh, P(*spec))
 
     return jax.tree_util.tree_map(leaf, tree)
+
+
+def serve_shardings(cache_struct: Any, state_struct: Any,
+                    capacity: int) -> Tuple[Any, Any]:
+    """jit in/out shardings for the slot engine's (cache, DecodeState) pair.
+
+    The cache shards its slot axis over the data axes (page pools per tp —
+    see :func:`cache_shardings`); the DecodeState is fully REPLICATED: its
+    leaves are per-slot scalars the host fetches every chunk, and every
+    decode step reduces over them (done/budget bookkeeping, the statistics
+    sums), so replication costs nothing and keeps the per-chunk fetch a
+    single local transfer.
+    """
+    ctx = current_ctx()
+    assert ctx is not None, "serve_shardings requires an active shard_ctx"
+    state_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(ctx.mesh, P(*([None] * len(s.shape)))),
+        state_struct)
+    return cache_shardings(cache_struct, capacity), state_sh

@@ -1,0 +1,58 @@
+"""Jit'd wrappers + XAIF registration for contiguous decode attention.
+
+The ``attn_decode`` op is the decode-attention contract of the CONTIGUOUS
+KV cache — the cached-decode mixer that used to be inline einsums in
+``models/attention.py`` (ROADMAP follow-up from PR 2/3: only the paged
+path dispatched through XAIF). Positional signature::
+
+    (q [B, Hq, D], k [B, Hkv, S, D], v [B, Hkv, S, Dv], cache_pos [B] i32)
+
+plus keyword-only ``scale`` / ``precise`` / ``q2``+``k2`` (the MLA
+absorbed-decode variant — see ref.py). Two backends:
+
+* ``ref``    — the exact former inline einsums; BITWISE-identical, so
+  routing through the op changes nothing about token identity;
+* ``pallas`` — block-sequential online-softmax kernel (``bs`` tunable),
+  one grid step per KV block with cache_pos scalar-prefetched.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core import xaif
+from repro.kernels.attn_decode import attn_decode as _k
+from repro.kernels.attn_decode import ref as _ref
+
+
+def attn_decode_cost(b, hq, s, d, dtype_bytes=2):
+    """Decode is bandwidth-bound on the cache: one pass over [B, S] K and V
+    lanes, one [B, Hq, D] query."""
+    flops = 4.0 * b * hq * s * d
+    return {"flops": flops,
+            "hbm_bytes": dtype_bytes * b * (2 * s * d + 2 * hq * d)}
+
+
+def _supports_blocked(shapes, dtype):
+    # k is [B, Hkv, S, D]; the kernel tiles S without padding
+    return shapes[1][2] % 8 == 0
+
+
+@xaif.register("attn_decode", "ref", cost_fn=attn_decode_cost,
+               description="contiguous decode attention einsums; bitwise-"
+                           "identical to the former inline mixer math")
+def attn_decode_ref_op(q, k, v, cache_pos, scale: Optional[float] = None,
+                       q2=None, k2=None, precise: bool = False):
+    return _ref.attn_decode_ref(q, k, v, cache_pos, scale, q2, k2, precise)
+
+
+@xaif.register("attn_decode", "pallas", cost_fn=attn_decode_cost,
+               supports=_supports_blocked,
+               tunables={"bs": (128, 256, 512)},
+               description="block-sequential Pallas decode attention: "
+                           "online softmax over KV blocks, cache_pos "
+                           "scalar-prefetched")
+def attn_decode_pallas_op(q, k, v, cache_pos, scale: Optional[float] = None,
+                          q2=None, k2=None, precise: bool = False, *,
+                          bs: int = 128, interpret: bool = False):
+    return _k.attn_decode_pallas(q, k, v, cache_pos, scale, q2, k2,
+                                 precise, bs=bs, interpret=interpret)

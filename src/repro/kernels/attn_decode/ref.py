@@ -1,0 +1,69 @@
+"""Reference contiguous decode attention (the cached-decode mixer math).
+
+One query token per sequence attends a contiguous KV cache
+(``k``/``v`` [B, Hkv, S, D]); positions past each sequence's ``cache_pos``
+are masked. This is the einsum pair that used to live INLINE in
+``models/attention.py`` — extracting it behind the ``attn_decode`` XAIF op
+lets autotuned policies pick the decode-attention backend for the
+contiguous serve engine exactly as ``attn_decode_paged`` already does for
+the paged one.
+
+Two numeric modes, both BITWISE-identical to the former inline code (the
+slot engine's token-identity guarantee rests on this backend):
+
+* default (GQA): operands kept in the cache dtype (bf16), query pre-scaled,
+  fp32 MXU accumulation — an fp32 cast of k/v would materialize a full fp32
+  cache copy per layer (see attention.apply_attention_decode);
+* ``precise=True`` (MLA absorbed decode): everything fp32, scale applied
+  AFTER the q.k dot products, optional second score component (``q2``/``k2``
+  — the shared rotary key) added before scaling.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def attn_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                    cache_pos: jax.Array,
+                    scale: Optional[float] = None,
+                    q2: Optional[jax.Array] = None,
+                    k2: Optional[jax.Array] = None,
+                    precise: bool = False) -> jax.Array:
+    """q [B, Hq, D]; k [B, Hkv, S, D]; v [B, Hkv, S, Dv]; cache_pos [B] i32
+    (positions <= cache_pos are valid). ``q2`` [B, Hq, rd] / ``k2``
+    [B, 1, S, rd] add a second score component (MLA's shared rotary key).
+    Returns fp32 [B, Hq, Dv]."""
+    b, hq, d = q.shape
+    _, hkv, s, _ = k.shape
+    g = hq // hkv
+    valid = jnp.arange(s)[None, :] <= cache_pos[:, None]    # [B, S]
+    scale_ = d ** -0.5 if scale is None else scale
+    if precise:
+        # fp32 throughout, post-scale — the MLA absorbed-decode numerics.
+        # Hkv == 1: the latent is one shared "KV head" over all query heads.
+        assert hkv == 1, "precise mode is the MLA path (single latent head)"
+        logits = jnp.einsum("bhd,bsd->bhs", q.astype(jnp.float32),
+                            k[:, 0].astype(jnp.float32))
+        if q2 is not None:
+            logits = logits + jnp.einsum(
+                "bhd,bsd->bhs", q2.astype(jnp.float32),
+                k2[:, 0].astype(jnp.float32))
+        logits = logits * scale_
+        logits = jnp.where(valid[:, None, :], logits, _NEG)
+        p = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhs,bsd->bhd", p, v[:, 0].astype(jnp.float32))
+    # GQA decode numerics: cache-dtype operands, pre-scaled query, fp32
+    # accumulation on the MXU, grouped KV (no head replication)
+    qg = (q.reshape(b, hkv, g, d) * scale_).astype(k.dtype)
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits = jnp.where(valid[:, None, None, :], logits, _NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, v.shape[-1])

@@ -1,12 +1,19 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Run before ANY other import: jax locks the device count at first init and
+# the production meshes need 512 host placeholders. APPEND-if-absent — a
+# user-set XLA_FLAGS (e.g. the serving tests' forced 4-device host) must
+# never be clobbered by merely importing this module.
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=512").strip()
 
 """Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers,
 compiles, fits, and derive its roofline terms — with zero real allocation.
 
-The two lines above run before ANY other import: jax locks the device count
-at first init, and the production meshes need 512 host placeholders. Smoke
-tests / benches never import this module and keep seeing 1 device.
+The guard above runs before jax import. Smoke tests / benches never import
+this module and keep seeing 1 device.
 
 Per cell this driver produces:
   * full-module ``jit(step).lower(...).compile()`` — THE deliverable gate:
@@ -113,7 +120,10 @@ def _batch_shardings(ctx, arch, shape):
 
 
 def _analyze(compiled) -> Dict[str, Any]:
-    cost = dict(compiled.cost_analysis() or {})
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):     # older jax: one dict per device
+        cost = cost[0] if cost else {}
+    cost = dict(cost)
     mem = compiled.memory_analysis()
     coll = rl.collective_bytes(compiled.as_text())
     return {

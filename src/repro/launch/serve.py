@@ -17,6 +17,22 @@ admission is by free pages, so short requests stop reserving worst-case
 ``--max-len`` rows. Shrink ``--num-pages`` below the contiguous worst case
 (capacity x max_len / page_size) to trade headroom for concurrency.
 
+``--mesh dp=2,model=2`` serves the slot batch on a real device mesh: the
+engine jits every entry point with explicit in/out shardings (params tp
+over the model axis, the cache's slot dim over the data axes, page pools
+head-sharded, DecodeState + page table replicated) and the request-stream
+simulator runs under the matching ``shard_ctx``. Greedy tokens are
+identical to the single-device engine on any mesh shape. On a CPU host,
+force virtual devices first:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m repro.launch.serve --arch chatglm3-6b \
+        --mesh dp=2,model=2
+
+``--temperature`` / ``--top-k`` switch the scan body from greedy argmax to
+temperature / top-k sampling through per-slot PRNG keys (``--sample-seed``
+makes streams reproducible).
+
 Backend selection: by default the static all-"ref" AccelConfig. Pass
 ``--policy PATH`` to serve under a persisted shape-aware DispatchPolicy
 (produced by ``repro.core.autotune``), or ``--autotune`` to run the
@@ -28,6 +44,7 @@ JSON records the arch per cell) — persisting to ``--policy``'s path
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import os
 
@@ -35,12 +52,35 @@ import jax
 import numpy as np
 
 from repro.configs.base import (AccelConfig, RunConfig, SHAPES_BY_NAME,
-                                get_arch, list_archs)
+                                ShardingPolicy, get_arch, list_archs)
 from repro.core import autotune as autotune_mod
 from repro.core import xaif
+from repro.dist import sharding as shd
 from repro.models import lm
 from repro.serve.engine import SlotEngine
 from repro.serve.scheduler import poisson_requests, serve
+
+# serve-time layout: weights tp-sharded over the model axis and REPLICATED
+# over data (fsdp is a training-time memory lever; at decode it would force
+# a per-layer weight all-gather), cache slot dim over the data axes
+SERVE_POLICY = ShardingPolicy(fsdp=False)
+
+
+def parse_mesh(spec: str):
+    """``dp=2,model=2`` (aliases: dp/data, tp/model) -> Mesh("data","model").
+    """
+    sizes = {"data": 1, "model": 1}
+    alias = {"dp": "data", "data": "data", "tp": "model", "model": "model"}
+    for part in spec.split(","):
+        k, v = part.split("=")
+        sizes[alias[k.strip()]] = int(v)
+    need = sizes["data"] * sizes["model"]
+    if need > jax.device_count():
+        raise SystemExit(
+            f"--mesh {spec} needs {need} devices but only "
+            f"{jax.device_count()} are visible (on CPU prepend "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need})")
+    return jax.make_mesh((sizes["data"], sizes["model"]), ("data", "model"))
 
 
 def main():
@@ -64,6 +104,16 @@ def main():
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-pages", type=int, default=0,
                     help="page pool size (0 = contiguous worst case)")
+    ap.add_argument("--mesh", default="",
+                    help="serve on a device mesh, e.g. dp=2,model=2 "
+                         "(aliases dp/data, tp/model); greedy tokens stay "
+                         "identical to the single-device engine")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation for sampled decode (0 = full)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="base seed of the per-slot sampling PRNG keys")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--policy", default=autotune_mod.DEFAULT_POLICY_PATH,
                     help="path to a persisted DispatchPolicy JSON")
@@ -107,16 +157,31 @@ def main():
         max_new_tokens=args.new_tokens,
         vocab_size=cfg.vocab_size, seed=args.seed)
 
+    mesh = parse_mesh(args.mesh) if args.mesh else None
     engine = SlotEngine(run, capacity=args.capacity, max_len=args.max_len,
                         chunk=args.chunk, gated=gated, paged=args.paged,
                         page_size=args.page_size,
-                        num_pages=args.num_pages or None)
-    report = serve(engine, params, requests, realtime=args.rate > 0)
+                        num_pages=args.num_pages or None,
+                        mesh=mesh, sharding=SERVE_POLICY if mesh else None,
+                        temperature=args.temperature, top_k=args.top_k,
+                        sample_seed=args.sample_seed)
+    # the engine's jitted entries carry their own shardings; shard_ctx
+    # around the stream simulator covers any ad-hoc constrain/device_put
+    # in the serve path (identity when no mesh is installed)
+    mesh_ctx = (shd.shard_ctx(mesh, SERVE_POLICY) if mesh
+                else contextlib.nullcontext())
+    with mesh_ctx:
+        report = serve(engine, params, requests, realtime=args.rate > 0)
 
     lat = report.latency_percentiles()
+    mesh_desc = (f" mesh={args.mesh} ({jax.device_count()} devices)"
+                 if mesh else "")
     print(f"arch={cfg.name} capacity={args.capacity} "
           f"requests={args.requests} rate={args.rate or 'inf'}/s "
-          f"gated={gated} paged={args.paged}")
+          f"gated={gated} paged={args.paged}"
+          + mesh_desc
+          + (f" temperature={args.temperature} top_k={args.top_k}"
+             if args.temperature > 0 else ""))
     print(f"  traces: decode={engine.decode_traces} "
           f"prefill_buckets={engine.prefill_traces} "
           f"(decode chunks run: {engine.decode_calls})")

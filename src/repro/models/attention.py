@@ -221,28 +221,18 @@ def apply_attention_decode(params, x, cfg: ArchConfig, policy: xaif.PolicyLike,
                            cache: KVCache, cache_pos: jax.Array
                            ) -> Tuple[jax.Array, KVCache]:
     """One-token decode. x [B, 1, d]; cache_pos [B] = current length (the new
-    token's position). Grouped-KV einsum, no head replication."""
+    token's position). The new K/V row is written in place, then the
+    ``attn_decode`` XAIF op attends the contiguous cache (ref backend: the
+    grouped-KV einsums, bitwise-identical to the former inline math — so
+    autotuned policies now cover the contiguous serve decode path too)."""
     b = x.shape[0]
-    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    g = hq // hkv
+    hq, dh = cfg.num_heads, cfg.head_dim
     q, k, v = _project_qkv(params, x, cfg, policy, cache_pos[:, None])
     # write the new K/V at each sequence's position
     bidx = jnp.arange(b)
     ck = cache.k.at[bidx, :, cache_pos, :].set(k[:, :, 0, :].astype(cache.k.dtype))
     cv = cache.v.at[bidx, :, cache_pos, :].set(v[:, :, 0, :].astype(cache.v.dtype))
-    s = ck.shape[2]
-    qg = (q.reshape(b, hkv, g, dh) * (dh ** -0.5)).astype(ck.dtype)
-    # decode is HBM-bound on the cache: keep the einsum operands in the
-    # cache dtype (bf16) and accumulate fp32 on the MXU — an .astype(f32)
-    # on ck/cv would MATERIALIZE a full fp32 copy of the KV cache per layer
-    # (measured: 3.8 GB/layer/chip -> §Perf iteration C1)
-    logits = jnp.einsum("bhgd,bhsd->bhgs", qg, ck,
-                        preferred_element_type=jnp.float32)
-    valid = jnp.arange(s)[None, :] <= cache_pos[:, None]   # [B, S]
-    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
-    p = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bhgs,bhsd->bhgd", p.astype(cv.dtype), cv,
-                     preferred_element_type=jnp.float32)
+    out = xaif.call("attn_decode", policy, q[:, :, 0, :], ck, cv, cache_pos)
     out = out.reshape(b, 1, hq * dh).astype(x.dtype)
     return xaif.call("gemm", policy, out, params["wo"]), KVCache(ck, cv)
 
@@ -387,6 +377,11 @@ def apply_mla_decode(params, x, cfg: ArchConfig, policy: xaif.PolicyLike,
     score(t, s) = q_nope_t^T W_uk c_s + q_rope_t^T k_rope_s
                 = (W_uk^T q_nope_t)^T c_s + ...  — so per step we project the
     query into latent space once and never decompress the cache.
+
+    The latent is one shared "KV head", so the same ``attn_decode`` XAIF op
+    that serves GQA decode attends it with Hkv=1, ``precise=True`` (fp32,
+    post-scale) and the rotary key as the second score component — exactly
+    mirroring ``apply_mla_decode_paged``'s use of ``attn_decode_paged``.
     """
     m = cfg.mla
     b = x.shape[0]
@@ -397,21 +392,16 @@ def apply_mla_decode(params, x, cfg: ArchConfig, policy: xaif.PolicyLike,
     bidx = jnp.arange(b)
     c_kv = cache.c_kv.at[bidx, cache_pos, :].set(c_new[:, 0].astype(cache.c_kv.dtype))
     k_rope = cache.k_rope.at[bidx, cache_pos, :].set(kr_new[:, 0].astype(cache.k_rope.dtype))
-    s = c_kv.shape[1]
     # absorb W_uk into the query: q_abs [B, H, lora]
     w_uk = params["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
     q_abs = jnp.einsum("bhd,lhd->bhl", q_nope[:, :, 0].astype(jnp.float32),
                        w_uk.astype(jnp.float32))
     scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
-    logits = (jnp.einsum("bhl,bsl->bhs", q_abs, c_kv.astype(jnp.float32))
-              + jnp.einsum("bhd,bsd->bhs", q_rope[:, :, 0].astype(jnp.float32),
-                           k_rope.astype(jnp.float32))) * scale
-    valid = jnp.arange(s)[None, :] <= cache_pos[:, None]
-    logits = jnp.where(valid[:, None, :], logits, -1e30)
-    p = jax.nn.softmax(logits, axis=-1)
-    # attend the latent, then decompress the pooled latent per head:
-    # out_h = W_uv_h^T (sum_s p_s c_s)
-    pooled = jnp.einsum("bhs,bsl->bhl", p, c_kv.astype(jnp.float32))
+    pooled = xaif.call(
+        "attn_decode", policy, q_abs, c_kv[:, None], c_kv[:, None],
+        cache_pos, scale=scale, q2=q_rope[:, :, 0], k2=k_rope[:, None],
+        precise=True)                                       # [B, H, lora]
+    # decompress the pooled latent per head: out_h = W_uv_h^T (sum_s p_s c_s)
     w_uv = params["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
     out = jnp.einsum("bhl,lhd->bhd", pooled, w_uv.astype(jnp.float32))
     out = out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)

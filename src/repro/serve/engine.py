@@ -52,13 +52,15 @@ decode (per-sequence groups) is an open item — see ROADMAP.md.
 from __future__ import annotations
 
 import functools
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import RunConfig
+from repro.configs.base import RunConfig, ShardingPolicy
 from repro.core.early_exit import gated_layer_fraction, merge_exit_logits
+from repro.dist import sharding as shd
 from repro.models import lm
 
 # ---------------------------------------------------------------------------
@@ -161,27 +163,80 @@ class DecodeState(NamedTuple):
     slot live, retirement is pure HOST bookkeeping (the next admission
     overwrites the row) — so backfill never re-traces or touches device
     state beyond the one prefill call.
+
+    ``rng`` carries one PRNG key PER SLOT (raw uint32[2] rows), advanced
+    only on sampled steps — the greedy default never touches it, so greedy
+    numerics are unchanged leaf-for-leaf. Keys are per-slot so a request's
+    sample stream depends only on its slot and admission, never on which
+    other slots happen to be live (the same composition-independence
+    argument as the per-slot cache positions).
     """
     tokens: jax.Array        # [S] i32 — last token per slot (next step input)
     done: jax.Array          # [S] bool
     generated: jax.Array     # [S] i32 — tokens produced (incl. prefill token)
     budget: jax.Array        # [S] i32 — max_new_tokens per slot
+    rng: jax.Array           # [S, 2] u32 — per-slot PRNG key (sampling)
     exit_cnt: jax.Array      # f32 — Σ over steps of early-exited live slots
     gated_layers: jax.Array  # f32 — Σ of per-slot gated layer fractions
     live_cnt: jax.Array      # f32 — Σ over steps of live slots
 
 
-def init_decode_state(capacity: int) -> DecodeState:
+def init_decode_state(capacity: int, seed: int = 0) -> DecodeState:
     z = jnp.zeros((), jnp.float32)
+    base = jax.random.PRNGKey(seed)
     return DecodeState(
         tokens=jnp.zeros((capacity,), jnp.int32),
         done=jnp.ones((capacity,), bool),
         generated=jnp.zeros((capacity,), jnp.int32),
         budget=jnp.zeros((capacity,), jnp.int32),
+        rng=jax.vmap(lambda i: jax.random.fold_in(base, i))(
+            jnp.arange(capacity)),
         exit_cnt=z, gated_layers=z, live_cnt=z)
 
 
-def make_prefill_slot(run: RunConfig, bucket_len: int):
+def make_sampler(temperature: float, top_k: int = 0) -> Optional[Callable]:
+    """sample(key u32[2], logits [V]) -> i32 token, or None for greedy.
+
+    Temperature-scaled (optionally top-k-truncated) categorical sampling —
+    the ROADMAP "non-greedy sampling" first step. Greedy (temperature 0)
+    returns None so callers keep the exact argmax graph.
+    """
+    if temperature <= 0.0:
+        return None
+
+    def sample(key, logits):
+        lg = logits.astype(jnp.float32) / temperature
+        if top_k > 0:
+            kth = jax.lax.top_k(lg, top_k)[0][-1]
+            lg = jnp.where(lg < kth, -jnp.inf, lg)
+        return jax.random.categorical(key, lg).astype(jnp.int32)
+
+    return sample
+
+
+def _admit_slot(st: DecodeState, logits0, slot, max_new,
+                sampler: Optional[Callable]) -> Tuple[DecodeState, jax.Array]:
+    """Shared admission tail: first token (greedy or sampled with the
+    slot's key) + slot-state bookkeeping. Greedy leaves ``rng`` untouched,
+    so the greedy trace is leaf-identical to the pre-sampling engine."""
+    if sampler is None:
+        tok0 = jnp.argmax(logits0, axis=-1).astype(jnp.int32)
+        rng = st.rng
+    else:
+        key = jax.random.fold_in(st.rng[slot], 0)
+        tok0 = sampler(key, logits0)
+        rng = st.rng.at[slot].set(jax.random.fold_in(st.rng[slot], 1))
+    st = st._replace(
+        tokens=st.tokens.at[slot].set(tok0),
+        done=st.done.at[slot].set(max_new <= 1),
+        generated=st.generated.at[slot].set(1),
+        budget=st.budget.at[slot].set(max_new),
+        rng=rng)
+    return st, tok0
+
+
+def make_prefill_slot(run: RunConfig, bucket_len: int,
+                      sampler: Optional[Callable] = None):
     """Jitted per-bucket admission: batch-1 prefill → fill_slot → slot vars.
 
     One trace per (arch, bucket) pair; the slot index, true length and token
@@ -195,20 +250,16 @@ def make_prefill_slot(run: RunConfig, bucket_len: int):
         logits, slot_cache = lm.forward_prefill(
             params, tokens, cfg, policy, slot_cache,
             lengths=true_len[None])
-        tok0 = jnp.argmax(logits[0], axis=-1).astype(jnp.int32)
         cache = lm.fill_slot(cache, slot_cache, slot, true_len)
-        st = st._replace(
-            tokens=st.tokens.at[slot].set(tok0),
-            done=st.done.at[slot].set(max_new <= 1),
-            generated=st.generated.at[slot].set(1),
-            budget=st.budget.at[slot].set(max_new))
+        st, tok0 = _admit_slot(st, logits[0], slot, max_new, sampler)
         return cache, st, tok0
 
     return prefill_slot
 
 
 def make_prefill_slot_paged(run: RunConfig, bucket_len: int,
-                            page_size: int):
+                            page_size: int,
+                            sampler: Optional[Callable] = None):
     """Paged admission: contiguous batch-1 prefill -> page scatter.
 
     The prefill compute is unchanged (a bucketed contiguous batch-1 cache);
@@ -223,27 +274,25 @@ def make_prefill_slot_paged(run: RunConfig, bucket_len: int,
         logits, slot_cache = lm.forward_prefill(
             params, tokens, cfg, policy, slot_cache,
             lengths=true_len[None])
-        tok0 = jnp.argmax(logits[0], axis=-1).astype(jnp.int32)
         cache = lm.fill_slot_paged(cache, slot_cache, slot, true_len,
                                    page_ids)
-        st = st._replace(
-            tokens=st.tokens.at[slot].set(tok0),
-            done=st.done.at[slot].set(max_new <= 1),
-            generated=st.generated.at[slot].set(1),
-            budget=st.budget.at[slot].set(max_new))
+        st, tok0 = _admit_slot(st, logits[0], slot, max_new, sampler)
         return cache, st, tok0
 
     return prefill_slot
 
 
-def make_decode_chunk(run: RunConfig, steps: int, gated: bool = False):
+def make_decode_chunk(run: RunConfig, steps: int, gated: bool = False,
+                      sampler: Optional[Callable] = None):
     """One jitted lax.scan of ``steps`` decode steps over the slot batch.
 
-    Everything stays on device: greedy sampling, early-exit merge, per-slot
-    done/budget bookkeeping, statistics accumulation. Done/empty slots keep
-    feeding their frozen token (their output is discarded and their cache
-    position is pinned, so the valid prefix never corrupts); the caller
-    performs ONE host fetch of (tokens [S, steps], state) per chunk.
+    Everything stays on device: sampling (greedy argmax, or temperature /
+    top-k through the per-slot keys in ``DecodeState.rng`` when ``sampler``
+    is given), early-exit merge, per-slot done/budget bookkeeping,
+    statistics accumulation. Done/empty slots keep feeding their frozen
+    token (their output is discarded and their cache position is pinned, so
+    the valid prefix never corrupts); the caller performs ONE host fetch of
+    (tokens [S, steps], state) per chunk.
     """
     cfg, policy = run.arch, run.accel
     n_layers = cfg.num_layers
@@ -276,7 +325,13 @@ def make_decode_chunk(run: RunConfig, steps: int, gated: bool = False):
             else:
                 exited = jnp.zeros_like(st.done)
                 gated_frac = jnp.zeros(st.done.shape, jnp.float32)
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if sampler is None:
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            new_rng = st.rng
+        else:
+            split = jax.vmap(lambda k: jax.random.split(k, 2))(st.rng)
+            next_tok = jax.vmap(sampler)(split[:, 0], logits)
+            new_rng = split[:, 1]
         next_tok = jnp.where(live, next_tok, st.tokens)
         # pin cache positions of done/empty slots (their KV write lands one
         # past the valid prefix and is overwritten before it could be read)
@@ -288,6 +343,7 @@ def make_decode_chunk(run: RunConfig, steps: int, gated: bool = False):
             tokens=next_tok,
             done=st.done | (generated >= st.budget),
             generated=generated,
+            rng=new_rng,
             exit_cnt=st.exit_cnt + jnp.sum(exited.astype(jnp.float32) * live_f),
             gated_layers=st.gated_layers + jnp.sum(gated_frac * live_f),
             live_cnt=st.live_cnt + jnp.sum(live_f))
@@ -318,12 +374,34 @@ class SlotEngine:
     with the contiguous engine holds bitwise when page_size divides
     max_len (equal attended extents); the gated early-exit path is not yet
     page-aware.
+
+    ``(mesh, sharding)``: the "bus topology" knob of this layer. With a
+    Mesh, EVERY jitted entry point (decode chunk, per-bucket prefill,
+    init_state) is built with explicit ``in_shardings``/``out_shardings``:
+    params per ``dist.sharding.param_shardings`` (tp over the model axis,
+    optionally fsdp), the cache per ``cache_shardings`` (slot axis over the
+    data axes; page pools head-sharded per tp, page table replicated), the
+    DecodeState replicated — and ``donate_argnums`` is kept, so sharded
+    caches still update in place. Tracing runs under ``shard_ctx(mesh,
+    sharding)`` so the model's ``constrain`` calls resolve. With NO mesh
+    every helper degrades to the exact single-device behavior, and on any
+    mesh shape greedy tokens are identical to the single-device engine
+    (tested under forced multi-device hosts in tests/test_serving_engine.py
+    / test_paged.py).
+
+    ``temperature`` / ``top_k`` / ``sample_seed``: non-greedy sampling in
+    the scan body through per-slot PRNG keys (``DecodeState.rng``).
+    Greedy (temperature 0) is the default and keeps the exact argmax graph.
     """
 
     def __init__(self, run: RunConfig, capacity: int, max_len: int,
                  chunk: int = 8, gated: bool = False, prompt_bucket: int = 16,
                  paged: bool = False, page_size: int = 16,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None,
+                 mesh: Optional[Mesh] = None,
+                 sharding: Optional[ShardingPolicy] = None,
+                 temperature: float = 0.0, top_k: int = 0,
+                 sample_seed: int = 0):
         cfg = run.arch
         if gated:
             assert (cfg.early_exit is not None
@@ -345,6 +423,12 @@ class SlotEngine:
         if paged:
             assert self.num_pages >= self.max_pages + 1, \
                 "page pool cannot hold even one max-length request"
+        self.mesh = mesh
+        self.sharding = sharding if sharding is not None else run.sharding
+        self.temperature = temperature
+        self.top_k = top_k
+        self.sample_seed = sample_seed
+        self._sampler = make_sampler(temperature, top_k)
         # prefix layers inherit their mixer from the pattern, so all-attn
         # patterns are pad-safe end to end; recurrent mixers are not
         self.pad_prompts = all(b.mixer == "attn" for b in cfg.block_pattern)
@@ -353,12 +437,74 @@ class SlotEngine:
         self.prefill_traces = 0
         self.decode_calls = 0
 
+        # resolved once: (params_sh, cache_sh, state_sh) or None (no mesh)
+        self._shardings = self._resolve_shardings()
+
+        decode_fn = make_decode_chunk(run, chunk, gated, self._sampler)
+
         def counted_decode(params, cache, st):
             self.decode_traces += 1          # runs at TRACE time only
-            return make_decode_chunk(run, chunk, gated)(params, cache, st)
+            return decode_fn(params, cache, st)
 
-        self._decode = jax.jit(counted_decode, donate_argnums=(1, 2))
+        jit_kw = {}
+        if self._shardings is not None:
+            params_sh, cache_sh, state_sh = self._shardings
+            jit_kw = dict(
+                in_shardings=(params_sh, cache_sh, state_sh),
+                out_shardings=(cache_sh, state_sh,
+                               NamedSharding(self.mesh, P(None, None))))
+        self._decode = jax.jit(self._traced(counted_decode),
+                               donate_argnums=(1, 2), **jit_kw)
         self._prefill = {}                   # bucket_len -> jitted fn
+
+    # -- mesh plumbing -----------------------------------------------------
+
+    def _traced(self, fn):
+        """Install the engine's shard_ctx for the DURATION OF TRACING so
+        the model's ``constrain``/``spec_for`` calls resolve against the
+        engine mesh; identity with no mesh (no context -> no-ops)."""
+        if self.mesh is None:
+            return fn
+        mesh, policy = self.mesh, self.sharding
+
+        @functools.wraps(fn)
+        def wrapped(*args):
+            with shd.shard_ctx(mesh, policy):
+                return fn(*args)
+
+        return wrapped
+
+    def _init_fn(self):
+        if self.paged:
+            return lambda: (
+                lm.init_paged_cache(self.run.arch, self.capacity,
+                                    self.max_len, self.page_size,
+                                    self.num_pages),
+                init_decode_state(self.capacity, self.sample_seed))
+        return lambda: (
+            lm.init_cache(self.run.arch, self.capacity, self.max_len),
+            init_decode_state(self.capacity, self.sample_seed))
+
+    def _resolve_shardings(self):
+        if self.mesh is None:
+            return None
+        params_struct = jax.eval_shape(
+            functools.partial(lm.init_lm, jax.random.PRNGKey(0),
+                              self.run.arch))
+        cache_struct, state_struct = jax.eval_shape(self._init_fn())
+        with shd.shard_ctx(self.mesh, self.sharding):
+            params_sh = shd.param_shardings(params_struct)
+            cache_sh, state_sh = shd.serve_shardings(
+                cache_struct, state_struct, self.capacity)
+        return params_sh, cache_sh, state_sh
+
+    def place_params(self, params):
+        """device_put ``params`` per the engine's sharding, so repeated
+        decode/prefill calls hit the jit fast path instead of re-sharding
+        uncommitted host arrays every chunk. Identity with no mesh."""
+        if self._shardings is None:
+            return params
+        return jax.device_put(params, self._shardings[0])
 
     # -- device state ------------------------------------------------------
 
@@ -366,15 +512,11 @@ class SlotEngine:
         # jitted so every leaf is a DISTINCT device buffer — eagerly built
         # zero caches can alias identical constants, which breaks donation
         # (same workaround as the trainer's init; see trainer.py)
-        if self.paged:
-            return jax.jit(lambda: (
-                lm.init_paged_cache(self.run.arch, self.capacity,
-                                    self.max_len, self.page_size,
-                                    self.num_pages),
-                init_decode_state(self.capacity)))()
-        return jax.jit(lambda: (
-            lm.init_cache(self.run.arch, self.capacity, self.max_len),
-            init_decode_state(self.capacity)))()
+        kw = {}
+        if self._shardings is not None:
+            _, cache_sh, state_sh = self._shardings
+            kw = dict(out_shardings=(cache_sh, state_sh))
+        return jax.jit(self._traced(self._init_fn()), **kw)()
 
     # -- admission ---------------------------------------------------------
 
@@ -396,9 +538,23 @@ class SlotEngine:
         bucket = self._bucket(t)
         if bucket not in self._prefill:
             self.prefill_traces += 1
-            make = (make_prefill_slot_paged(self.run, bucket, self.page_size)
-                    if self.paged else make_prefill_slot(self.run, bucket))
-            self._prefill[bucket] = jax.jit(make, donate_argnums=(1, 2))
+            make = (make_prefill_slot_paged(self.run, bucket, self.page_size,
+                                            self._sampler)
+                    if self.paged else
+                    make_prefill_slot(self.run, bucket, self._sampler))
+            kw = {}
+            if self._shardings is not None:
+                params_sh, cache_sh, state_sh = self._shardings
+                rep = NamedSharding(self.mesh, P())
+                tok_sh = NamedSharding(self.mesh, P(None, None))
+                in_sh = (params_sh, cache_sh, state_sh, tok_sh,
+                         rep, rep, rep)
+                if self.paged:
+                    in_sh = in_sh + (NamedSharding(self.mesh, P(None)),)
+                kw = dict(in_shardings=in_sh,
+                          out_shardings=(cache_sh, state_sh, rep))
+            self._prefill[bucket] = jax.jit(self._traced(make),
+                                            donate_argnums=(1, 2), **kw)
         padded = jnp.zeros((1, bucket), jnp.int32).at[0, :t].set(prompt)
         args = (params, cache, st, padded, jnp.asarray(t, jnp.int32),
                 jnp.asarray(slot, jnp.int32), jnp.asarray(max_new, jnp.int32))
@@ -412,9 +568,15 @@ class SlotEngine:
 
     def set_page_table(self, cache, table) -> "lm.PagedLMCache":
         """Push the host mirror of the page table to the device cache
-        (between chunks — the table is data, never trace shape)."""
+        (between chunks — the table is data, never trace shape). On a mesh
+        the push is placed REPLICATED up front — matching the decode
+        chunk's in_shardings, so a dirty table never triggers a per-chunk
+        re-shard inside jit."""
         assert self.paged
-        return cache._replace(page_table=jnp.asarray(table, jnp.int32))
+        t = jnp.asarray(table, jnp.int32)
+        if self.mesh is not None:
+            t = jax.device_put(t, NamedSharding(self.mesh, P(None, None)))
+        return cache._replace(page_table=t)
 
     def kv_bytes(self, cache=None) -> int:
         """Total bytes of attention KV storage (pools or contiguous rows).
@@ -425,14 +587,7 @@ class SlotEngine:
         from repro.models.attention import (KVCache, MLACache, PagedKVCache,
                                             PagedMLACache)
         if cache is None:
-            cache, _ = jax.eval_shape(
-                lambda: (lm.init_paged_cache(self.run.arch, self.capacity,
-                                             self.max_len, self.page_size,
-                                             self.num_pages)
-                         if self.paged else
-                         lm.init_cache(self.run.arch, self.capacity,
-                                       self.max_len),
-                         init_decode_state(self.capacity)))
+            cache, _ = jax.eval_shape(self._init_fn())
         total = 0
         for state in tuple(cache.prefix) + tuple(cache.slots):
             if isinstance(state, (KVCache, MLACache, PagedKVCache,

@@ -92,7 +92,10 @@ class SlotScheduler:
 
     def __init__(self, engine: SlotEngine, params):
         self.engine = engine
-        self.params = params
+        # one device_put per stream: on a mesh this commits the params to
+        # their sharding so every chunk hits the jit fast path (identity on
+        # a single device)
+        self.params = engine.place_params(params)
         self.cache, self.state = engine.init_state()
         self.free: deque = deque(range(engine.capacity))
         self.occupant: Dict[int, Request] = {}       # slot -> request

@@ -6,6 +6,15 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
+
+# Mesh tests need a forced multi-device host; they skip on the default
+# single-device run and execute in the CI mesh-smoke job. Shared here so
+# the device requirement lives in exactly one place.
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="mesh tests need a forced multi-device host "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
 
 # Older jax (<=0.4.x) exposes shard_map under jax.experimental and spells
 # check_vma as check_rep; newer jax has jax.shard_map(check_vma=...).
