@@ -24,6 +24,12 @@ mesh-aware engine on every shape of a forced 4-device host that fits
 process keeps its single real device), asserting greedy token identity
 with the single-device engine and recording tok/s per shape.
 
+The MoE comparison (``moe_table``) serves one stream through a MoE arch
+twice — dropless per-token decode (the default since PR 5) vs the legacy
+batch-grouped capacity decode — recording tok/s, capacity-drop counts
+(asserted 0 for dropless) and solo-reference token identity (asserted for
+dropless; the grouped path's whole point of failure).
+
 Every configuration is measured WARM (each runs the full workload once to
 compile, then once timed), so the comparison is steady-state decode
 throughput, not compile time. Emits ``name,us_per_call,derived`` CSV rows
@@ -224,17 +230,90 @@ def paged_table(arch: str = "chatglm3-6b", capacity: int = 4,
         else:
             row["peak_kv_bytes"] = kv_bytes      # contiguous: always resident
         out[name] = row
-    if cfg.moe is None:
-        assert out["contiguous"]["tokens"] == out["paged"]["tokens"], \
-            "paged engine diverged from the contiguous engine"
-        token_identical = True
-    else:
-        # MoE decode capacity is batch-shared (seed artifact, see
-        # engine.py docstring): the 4x-slot paged engine batches
-        # differently, so token identity is not a valid oracle here
-        token_identical = "n/a (MoE batch-shared expert capacity)"
+    # token identity holds for EVERY arch family now — dropless MoE decode
+    # (PR 5) removed the batch-shared expert-capacity carve-out, so the
+    # 4x-slot paged engine batching differently can no longer perturb tokens
+    assert out["contiguous"]["tokens"] == out["paged"]["tokens"], \
+        "paged engine diverged from the contiguous engine"
     for row in out.values():
-        row["token_identical"] = token_identical
+        row["token_identical"] = True
+    return out
+
+
+def moe_table(arch: str = "qwen3-moe-30b-a3b", capacity: int = 4,
+              max_len: int = 64, num_requests: int = 12,
+              seed: int = 0) -> Dict[str, Dict]:
+    """Dropless vs grouped MoE decode (ROADMAP "Dropless MoE decode").
+
+    The same mixed-length closed-loop stream served twice through the slot
+    engine: the default DROPLESS decode (per-token ``moe_decode`` dispatch,
+    composition-independent) and the legacy capacity-GROUPED decode
+    (``MoEConfig.dropless_decode=False`` — one shared expert-capacity group
+    per decode batch). Records tok/s for both and the capacity-drop count
+    at a representative decode batch: measured for the grouped path, 0 BY
+    CONSTRUCTION for the dropless path (it has no capacity constant to
+    drop against — the every-expert-dispatched equivalence is pinned
+    against a dense oracle in tests/test_moe.py, not re-measured here).
+    The assert that carries weight is token identity with the solo
+    reference loop: required of the dropless engine, and exactly what the
+    grouped engine fails.
+    """
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.configs.base import (AccelConfig, RunConfig, SHAPES_BY_NAME,
+                                    get_arch)
+    from repro.models import lm
+    from repro.models import moe as moe_mod
+    from repro.serve.engine import generate
+    from repro.serve.scheduler import poisson_requests
+    cfg0 = get_arch(arch).reduced()
+    requests = poisson_requests(
+        num=num_requests, rate_hz=np.inf, prompt_lens=(4, 24),
+        max_new_tokens=(8, 24), vocab_size=cfg0.vocab_size, seed=seed)
+
+    out: Dict[str, Dict] = {}
+    for name, dropless in (("dropless", True), ("grouped", False)):
+        cfg = dataclasses.replace(cfg0, moe=dataclasses.replace(
+            cfg0.moe, dropless_decode=dropless))
+        run = RunConfig(arch=cfg, shape=SHAPES_BY_NAME["decode_32k"],
+                        accel=AccelConfig())
+        params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+        report, wall, _, engine = _serve_workload(
+            run, params, requests, capacity=capacity, max_len=max_len,
+            chunk=8, paged=False)
+        identical = True
+        for r in report.requests:
+            ref, _ = generate(run, params, jnp.asarray(r.prompt)[None],
+                              max_new_tokens=r.max_new_tokens,
+                              max_len=max_len)
+            if list(r.tokens) != [int(t) for t in np.asarray(ref)[0]]:
+                identical = False
+        # drop accounting at the decode-batch shape (routing math only,
+        # summed over 16 probe batches): grouped shares ONE capacity group
+        # over the slot batch and really drops; the dropless path has no
+        # capacity constant, so its 0 is structural, not a measurement
+        moe_params = moe_mod.init_moe(jax.random.PRNGKey(1), cfg,
+                                      jnp.dtype(cfg.dtype))
+        drops = 0
+        if not dropless:
+            for probe in range(16):
+                x = jax.random.normal(jax.random.PRNGKey(100 + probe),
+                                      (capacity, 1, cfg.d_model),
+                                      jnp.dtype(cfg.dtype))
+                drops += int(moe_mod.capacity_drop_count(moe_params, x, cfg,
+                                                         groups=1))
+        out[name] = {
+            "decode_tokens": report.decode_tokens,
+            "wall_s": wall,
+            "tok_per_s": report.decode_tokens / max(wall, 1e-9),
+            "decode_drop_count": drops,
+            "token_identical_to_solo": identical,
+            "decode_traces": engine.decode_traces,
+        }
+    assert out["dropless"]["token_identical_to_solo"], \
+        "dropless MoE engine diverged from the solo reference loop"
     return out
 
 
@@ -361,6 +440,20 @@ def main():
         f"tokens/s at a fixed KV budget (got {conc_gain:.2f}x / "
         f"{tok_gain:.2f}x)")
 
+    # dropless vs grouped MoE decode (the PR 5 composition-independence fix)
+    mo = moe_table()
+    for name in ("dropless", "grouped"):
+        r = mo[name]
+        print(f"serving/moe_decode_{name},{r['wall_s']*1e6:.2f},"
+              f"tok_per_s={r['tok_per_s']:.1f};"
+              f"decode_drops={r['decode_drop_count']};"
+              f"token_identical_to_solo={r['token_identical_to_solo']}")
+    print(f"moe decode: dropless at "
+          f"{mo['dropless']['tok_per_s']/max(mo['grouped']['tok_per_s'], 1e-9):.2f}x "
+          f"grouped tok/s, 0 drops, solo-identical "
+          f"(grouped drop count at the decode batch: "
+          f"{mo['grouped']['decode_drop_count']})")
+
     # per-mesh throughput: jax pins the device count at first init, so the
     # mesh table runs in a SUBPROCESS with a forced 4-device host (the
     # dryrun plays the same trick for its 512-device placeholders). The
@@ -413,6 +506,7 @@ def main():
             "paged_concurrency_gain": conc_gain,
             "paged_tok_per_s_gain": tok_gain,
             "slot_vs_seed_ratio": slot_ratio,
+            "moe_decode": mo,
             "mesh_serving": m,
         }
         with open(args.json, "w") as f:

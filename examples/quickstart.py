@@ -17,11 +17,21 @@ retired slots — returning their pages to the pool — without re-compiling.
 Decode is token-identical to the contiguous engine. ``repro.launch.serve``
 wraps the same path in a Poisson request-stream simulator (--paged).
 
+MoE archs serve COMPOSITION-INDEPENDENTLY: decode dispatches each token's
+top-k expert GEMMs through the ``moe_decode`` XAIF op (dropless — no
+shared expert-capacity group, so a request's tokens never depend on which
+other requests are batched or backfilled beside it), dead/retired slots
+are masked out of routing entirely (no capacity theft, no aux-count skew),
+and the engine prefills MoE prompts at exact length (capacity-bounded
+prefill is not pad-safe). Every token-identity guarantee below therefore
+covers qwen3-moe / deepseek-v2 / jamba too.
+
 Serve on a MESH: pass ``SlotEngine(..., mesh=jax.make_mesh((dp, tp),
 ("data", "model")), sharding=ShardingPolicy(fsdp=False))`` — every jitted
 entry point is built with explicit in/out shardings (params tp-sharded,
-the cache's slot axis over the data axes, page pools head-sharded) and
-greedy tokens stay identical to the single-device engine. From the CLI:
+the cache's slot axis over the data axes, page pools head-sharded, MoE
+expert stacks E-over-model) and greedy tokens stay identical to the
+single-device engine. From the CLI:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python -m repro.launch.serve --arch yi-9b \

@@ -28,6 +28,16 @@ class MoEConfig:
     capacity_factor: float = 1.25
     router_aux_weight: float = 0.01    # load-balance auxiliary loss weight
     router_dtype: str = "float32"
+    # renormalize gates over the KEPT experts after capacity dropping, so a
+    # dropped expert's share is redistributed instead of silently lost
+    # (prefill/train only — the dropless decode path never drops); the
+    # default pins the legacy numerics
+    renorm_kept: bool = False
+    # serve decode (T==1) dispatches each token's top-k expert GEMMs through
+    # the per-token ``moe_decode`` XAIF op — no capacity constant, no drops,
+    # so a slot's tokens never depend on its co-batch; False restores the
+    # batch-grouped capacity path (benchmarks/serving_bench.py compares them)
+    dropless_decode: bool = True
 
 
 @dataclass(frozen=True)

@@ -178,6 +178,26 @@ def _paged_attn_cell(np_pages: int, batch: int = 4, hq: int = 4,
     return build
 
 
+def _moe_decode_cell(e: int, batch: int = 4, k: int = 2, d: int = 64,
+                     h: int = 32):
+    """One moe_decode cell: ``batch`` decode tokens routed top-``k`` over
+    ``e`` experts. Assignments are drawn through a real softmax top-k so
+    the per-expert histogram is realistically uneven (what the sorted
+    ragged dispatch actually sees). ``e`` is the bucket axis and stays
+    fixed under ``scale``; the token count scales instead."""
+    def build(scale: int):
+        b_ = batch * scale
+        x = jax.random.normal(_key(0), (b_, d), jnp.float32)
+        wg = jax.random.normal(_key(1), (e, d, h), jnp.float32) * d ** -0.5
+        wu = jax.random.normal(_key(2), (e, d, h), jnp.float32) * d ** -0.5
+        wd = jax.random.normal(_key(3), (e, h, d), jnp.float32) * h ** -0.5
+        logits = jax.random.normal(_key(4), (b_, e), jnp.float32)
+        gate, idx = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), k)
+        gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+        return (x, idx.astype(jnp.int32), gate, wg, wu, wd), {}
+    return build
+
+
 # (op, bucket) -> builder(scale) -> (args, kwargs). Row classes straddle the
 # xaif bucket boundaries (<=32 / <=2048 / beyond). One cell per
 # (op, xaif.op_buckets(op)) entry for every BUILT-IN op; ops registered
@@ -186,11 +206,12 @@ def _paged_attn_cell(np_pages: int, batch: int = 4, hq: int = 4,
 #
 # Serving note: BOTH engines' decode attention now dispatches through XAIF
 # — "attn_decode" is the contiguous slot engine's cached mixer (GQA and
-# MLA absorbed decode) and "attn_decode_paged" the paged engine's — so a
-# tuned policy applies to the real serve decode path, alongside the row
-# ops (gemm/rmsnorm/entropy rows_s) every projection / norm / exit check
-# dispatches through. Only the Mamba/xLSTM decode recurrences remain
-# inline (ROADMAP follow-up).
+# MLA absorbed decode) and "attn_decode_paged" the paged engine's — and
+# MoE archs dispatch their decode FFN through "moe_decode" (the dropless
+# per-token path) — so a tuned policy applies to the real serve decode
+# path, alongside the row ops (gemm/rmsnorm/entropy rows_s) every
+# projection / norm / exit check dispatches through. Only the Mamba/xLSTM
+# decode recurrences remain inline (ROADMAP follow-up).
 CELLS: Dict[Tuple[str, str], Callable] = {
     ("gemm", "rows_s"): _gemm_cell(8),
     ("gemm", "rows_m"): _gemm_cell(256),
@@ -209,6 +230,8 @@ CELLS: Dict[Tuple[str, str], Callable] = {
     ("attn_decode", "kv_l"): _attn_decode_cell(2048),
     ("attn_decode_paged", "kv_s"): _paged_attn_cell(8),     # 8*16  = 128 kv
     ("attn_decode_paged", "kv_l"): _paged_attn_cell(128),   # 128*16 = 2048
+    ("moe_decode", "e_s"): _moe_decode_cell(8),
+    ("moe_decode", "e_l"): _moe_decode_cell(64),
 }
 
 
@@ -298,6 +321,11 @@ def arch_cells(cfg, *, capacity: int = 8, bucket_len: int = 64,
             1, batch=rows_s, din=d_inner, n=n_state)
         cells[("ssm_scan", "scan")] = _ssm_cell(
             bucket_len, batch=1, din=d_inner, n=n_state)
+    if cfg.moe is not None:
+        moe_bucket = "e_s" if cfg.moe.num_experts <= 16 else "e_l"
+        cells[("moe_decode", moe_bucket)] = _moe_decode_cell(
+            cfg.moe.num_experts, batch=rows_s, k=cfg.moe.top_k,
+            d=d, h=cfg.moe.d_expert)
     return cells
 
 
@@ -325,6 +353,9 @@ def _cost_args(op: str, shapes) -> Optional[tuple]:
         if op == "attn_decode_paged":
             q, kp, pt = shapes[0], shapes[1], shapes[3]
             return (q[0], q[1], pt[1], kp[2], q[2])
+        if op == "moe_decode":
+            xs, ks, wg = shapes[0], shapes[1], shapes[3]
+            return (xs[0], ks[1], wg[1], wg[2], wg[0])
         if op == "ssm_scan":
             u, a = shapes[0], shapes[2]
             return (u[0], u[1], u[2], a[-1])

@@ -7,7 +7,8 @@ with *varying requirements* can be selected per workload. The JAX analogue
 is a **shape-aware op-level dispatch table**:
 
   * an **op** is a named computational contract ("gemm", "rmsnorm",
-    "attention", "entropy_exit", "ssm_scan") with a fixed signature — the
+    "attention", "entropy_exit", "ssm_scan", "attn_decode",
+    "attn_decode_paged", "moe_decode") with a fixed signature — the
     "port" of the interface;
   * a **backend** is an implementation of that contract — the pure-jnp
     reference (the host-CPU path of the paper), a Pallas TPU kernel (the
@@ -169,6 +170,13 @@ def _decode_kv_bucket(shapes, _dtype):
     return "kv_s" if int(shapes[1][2]) <= 1024 else "kv_l"
 
 
+def _moe_bucket(shapes, _dtype):
+    # (x [B,d], expert_idx [B,K], gate [B,K], w_gate [E,d,h], ...): bucket
+    # by routed-expert count E — the knob that decides whether a per-token
+    # panel gather or a sorted ragged dispatch wins at decode
+    return "e_s" if int(shapes[3][0]) <= 16 else "e_l"
+
+
 _BUCKET_FNS: Dict[str, Callable] = {
     "gemm": _rows_bucket,
     "rmsnorm": _rows_bucket,
@@ -177,6 +185,7 @@ _BUCKET_FNS: Dict[str, Callable] = {
     "ssm_scan": _ssm_bucket,
     "attn_decode": _decode_kv_bucket,
     "attn_decode_paged": _paged_bucket,
+    "moe_decode": _moe_bucket,
 }
 
 _OP_BUCKETS: Dict[str, Tuple[str, ...]] = {
@@ -187,6 +196,7 @@ _OP_BUCKETS: Dict[str, Tuple[str, ...]] = {
     "ssm_scan": ("decode", "scan"),
     "attn_decode": ("kv_s", "kv_l"),
     "attn_decode_paged": ("kv_s", "kv_l"),
+    "moe_decode": ("e_s", "e_l"),
 }
 
 WILDCARD = "*"
@@ -465,3 +475,4 @@ def _ensure_builtin_backends():
     from repro.kernels.ssm_scan import ops as _ssm_ops           # noqa: F401
     from repro.kernels.attn_decode import ops as _decode_ops     # noqa: F401
     from repro.kernels.paged_attention import ops as _paged_ops  # noqa: F401
+    from repro.kernels.moe_decode import ops as _moe_ops         # noqa: F401

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 from typing import Tuple
 
+import jax
 import jax.numpy as jnp
 
 
@@ -64,3 +65,24 @@ def divisor_block(dim: int, block: int) -> int:
     while b > 1 and dim % b != 0:
         b //= 2
     return b
+
+
+def sorted_run_ranks(sorted_vals: jnp.ndarray) -> jnp.ndarray:
+    """Rank of each element within its run of equal values, along the LAST
+    axis of an already-sorted array. int32, same shape as the input.
+
+    The sort-based position-in-expert core shared by the MoE capacity path
+    (``models/moe.py``) and the moe_decode Pallas wrapper's ragged layout:
+    mark run starts, carry the latest start index with a running max, and
+    subtract — O(n) and bytes-free next to the one-hot-cumsum textbook
+    formulation (§Perf Q1).
+    """
+    n = sorted_vals.shape[-1]
+    iota = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32),
+                            sorted_vals.shape)
+    is_start = jnp.concatenate(
+        [jnp.ones((*sorted_vals.shape[:-1], 1), bool),
+         sorted_vals[..., 1:] != sorted_vals[..., :-1]], axis=-1)
+    seg_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, iota, 0), axis=-1)
+    return iota - seg_start

@@ -1,0 +1,107 @@
+"""Sort-by-expert ragged MoE decode dispatch — Pallas TPU kernel.
+
+The wrapper groups the B*K (token, expert) assignments by expert at trace
+time (argsort + rank-within-run — the same sort-based ranking the capacity
+path uses), pads each expert's run up to the block size ``bt`` and lays the
+padded runs back to back. Each grid step then computes ONE [bt, d] row
+block against ONE expert's SwiGLU panels: the block's expert id is
+scalar-prefetched (``PrefetchScalarGridSpec``) and indexes the weight
+BlockSpecs directly, so the accelerator only DMAs panels of experts that
+actually received tokens this step — the resident-data-only story the
+paged-attention kernel tells for KV pages, applied to expert weights.
+Unused tail blocks (expert id -1) write zeros and are never gathered back.
+
+Worst-case block count is static — ceil(B*K/bt) + E (every expert's run
+padded) — so the grid never re-traces as routing shifts between steps.
+
+VMEM per step @ bt=16, d=2048, h=768 (qwen3 full scale, bf16): x 64 KiB +
+3 weight panels ~9 MiB — inside the ~16 MiB budget; shrink ``bt`` has no
+effect on the panels, so the tunable trades dispatch padding against grid
+steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._pltpu_compat import compiler_params as _compiler_params
+from repro.kernels._tiling import sorted_run_ranks
+
+
+def _moe_kernel(be_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    i = pl.program_id(0)
+    live = be_ref[i] >= 0
+    xb = x_ref[...].astype(jnp.float32)                       # [bt, d]
+    gact = xb @ wg_ref[0].astype(jnp.float32)                 # [bt, h]
+    up = xb @ wu_ref[0].astype(jnp.float32)
+    hidden = jax.nn.silu(gact) * up
+    out = hidden @ wd_ref[0].astype(jnp.float32)              # [bt, d]
+    o_ref[...] = jnp.where(live, out, 0.0).astype(o_ref.dtype)
+
+
+def moe_decode_pallas(x: jax.Array, expert_idx: jax.Array, gate: jax.Array,
+                      w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array,
+                      *, bt: int = 8, interpret: bool = False) -> jax.Array:
+    """x [B, d]; expert_idx [B, K] i32; gate [B, K] f32;
+    w_gate/w_up [E, d, h]; w_down [E, h, d]. Returns fp32 [B, d].
+
+    Bitwise identity with the capacity path is the REF backend's contract,
+    not this kernel's — like every Pallas kernel here it is validated by
+    allclose (fp32 throughout, vs the ref's mixed-precision accumulate).
+    """
+    b, d = x.shape
+    k = expert_idx.shape[1]
+    e, _, h = w_gate.shape
+    bk = b * k
+
+    # ---- trace-time ragged layout: sort assignments by expert --------------
+    flat_e = expert_idx.reshape(-1).astype(jnp.int32)          # [BK]
+    tok = jnp.arange(bk, dtype=jnp.int32) // k                 # source token
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    rank = sorted_run_ranks(sorted_e)                          # rank in run
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    padded = -(-counts // bt) * bt                             # run -> blocks
+    bounds = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(padded)])
+    offsets = bounds[:-1]                                      # [E] run start
+    nb = -(-bk // bt) + e                                      # static worst case
+    dest = offsets[sorted_e] + rank                            # padded slot
+    x_pad = jnp.zeros((nb * bt, d), x.dtype).at[dest].set(x[tok[order]])
+
+    # per-block expert id: the expert whose padded run covers the block
+    starts = jnp.arange(nb, dtype=jnp.int32) * bt
+    blk_e = (jnp.searchsorted(offsets, starts, side="right")
+             .astype(jnp.int32) - 1)
+    blk_e = jnp.where(starts < bounds[1:][jnp.maximum(blk_e, 0)], blk_e, -1)
+
+    out_pad = pl.pallas_call(
+        functools.partial(_moe_kernel),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,          # blk_e
+            grid=(nb,),
+            in_specs=[
+                pl.BlockSpec((bt, d), lambda i, be: (i, 0)),
+                pl.BlockSpec((1, d, h),
+                             lambda i, be: (jnp.maximum(be[i], 0), 0, 0)),
+                pl.BlockSpec((1, d, h),
+                             lambda i, be: (jnp.maximum(be[i], 0), 0, 0)),
+                pl.BlockSpec((1, h, d),
+                             lambda i, be: (jnp.maximum(be[i], 0), 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((bt, d), lambda i, be: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nb * bt, d), jnp.float32),
+        compiler_params=_compiler_params(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(blk_e, x_pad, w_gate, w_up, w_down)
+
+    # ---- combine: gather back to assignment order, gate-weighted sum over k
+    outk = jnp.zeros((bk, d), jnp.float32).at[order].set(out_pad[dest])
+    return jnp.einsum("bk,bkd->bd", gate.astype(jnp.float32),
+                      outk.reshape(b, k, d))

@@ -1,0 +1,61 @@
+"""Jit'd wrappers + XAIF registration for dropless MoE decode dispatch.
+
+The ``moe_decode`` op is the per-token MoE contract of the serve decode
+path: each decode token computes its own top-k expert SwiGLUs — no
+capacity buffer, no drops, no cross-batch state (see ``models/moe.py``
+``apply_moe_decode``). Positional signature::
+
+    (x [B, d], expert_idx [B, K] i32, gate [B, K] f32,
+     w_gate [E, d, h], w_up [E, d, h], w_down [E, h, d])
+
+Two backends:
+
+* ``ref``    — per-token gather of the selected expert panels + k batched
+  GEMMs; bitwise-deterministic per slot regardless of co-batch (the serve
+  engine's MoE token-identity guarantee rests on it);
+* ``pallas`` — sort-by-expert ragged dispatch: assignments grouped by
+  expert at trace time, one grid step per padded [bt]-row run with the
+  expert id scalar-prefetched (only touched experts' panels are DMAd).
+"""
+from __future__ import annotations
+
+from repro.core import xaif
+from repro.kernels.moe_decode import moe_decode as _k
+from repro.kernels.moe_decode import ref as _ref
+
+
+def moe_decode_cost(b, k, d, h, e, dtype_bytes=2):
+    """Decode MoE is bandwidth-bound on expert weights: each of the (at
+    most) min(B*K, E) touched experts streams its three [d, h] panels once;
+    the [B, d] activations are noise by comparison."""
+    flops = 6.0 * b * k * d * h
+    touched = min(b * k, e)
+    return {"flops": flops,
+            "hbm_bytes": dtype_bytes * (3 * touched * d * h + 2 * b * d)}
+
+
+def _supports_blocked(shapes, dtype):
+    # w_gate is [E, d, h]; the kernel tiles padded dispatch rows by ``bt``
+    # and loads whole [d, h] expert panels, so both panel dims must respect
+    # the sublane floor
+    return shapes[3][1] % 8 == 0 and shapes[3][2] % 8 == 0
+
+
+@xaif.register("moe_decode", "ref", cost_fn=moe_decode_cost,
+               description="per-token expert gather + k batched GEMMs; "
+                           "bitwise-deterministic per slot regardless of "
+                           "co-batch")
+def moe_decode_ref_op(x, expert_idx, gate, w_gate, w_up, w_down):
+    return _ref.moe_decode_ref(x, expert_idx, gate, w_gate, w_up, w_down)
+
+
+@xaif.register("moe_decode", "pallas", cost_fn=moe_decode_cost,
+               supports=_supports_blocked,
+               tunables={"bt": (8, 16, 32)},
+               description="sort-by-expert ragged Pallas dispatch: one grid "
+                           "step per padded expert run, expert ids "
+                           "scalar-prefetched")
+def moe_decode_pallas_op(x, expert_idx, gate, w_gate, w_up, w_down, *,
+                         bt: int = 8, interpret: bool = False):
+    return _k.moe_decode_pallas(x, expert_idx, gate, w_gate, w_up, w_down,
+                                bt=bt, interpret=interpret)

@@ -1,0 +1,48 @@
+"""Reference dropless MoE decode dispatch (per-token expert gather).
+
+One decode token per sequence computes its top-k expert SwiGLUs by
+GATHERING the selected experts' weight panels — no capacity buffer, no
+drops, no state shared across the batch. Row ``b`` of the output is a
+function of ``x[b]``, ``expert_idx[b]``, ``gate[b]`` and the weights ONLY,
+and — the load-bearing detail — it is BITWISE-deterministic per slot
+regardless of which other slots are batched beside it. The serve engine's
+MoE token-identity-under-backfill guarantee rests on this backend.
+
+Why multiply+reduce instead of the obvious batched einsums: XLA:CPU's dot
+emitter selects its loop tiling from the ROW COUNT, so a dot-formulated
+contraction's per-row bits can change with the co-batch size (measured:
+~1e-7 on fp32 router logits, ~1e-2 on bf16 expert GEMMs between B=1 and
+B=4 at decode shapes). One flipped ulp upstream of an argmax breaks token
+identity between the slot engine (B = capacity) and the solo reference
+loop (B = 1). The explicit fp32 multiply+reduce vectorizes identically per
+row at any batch size — composition independence by construction, at VPU
+instead of MXU throughput (decode MoE is weight-bandwidth-bound anyway;
+the Pallas backend is the throughput path on real hardware).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_decode_ref(x: jax.Array, expert_idx: jax.Array, gate: jax.Array,
+                   w_gate: jax.Array, w_up: jax.Array,
+                   w_down: jax.Array) -> jax.Array:
+    """x [B, d]; expert_idx [B, K] i32; gate [B, K] f32 (dead slots carry
+    zero gates); w_gate/w_up [E, d, h]; w_down [E, h, d].
+    Returns fp32 [B, d]."""
+    b, d = x.shape
+    k = expert_idx.shape[1]
+    xf = x.astype(jnp.float32)
+    y = jnp.zeros((b, d), jnp.float32)
+    for j in range(k):                              # fixed combine order
+        idx = expert_idx[:, j]
+        wg = w_gate[idx].astype(jnp.float32)        # [B, d, h]
+        wu = w_up[idx].astype(jnp.float32)
+        wd = w_down[idx].astype(jnp.float32)        # [B, h, d]
+        gact = jnp.sum(xf[:, :, None] * wg, axis=1)            # [B, h]
+        up = jnp.sum(xf[:, :, None] * wu, axis=1)
+        hidden = jax.nn.silu(gact) * up
+        tok = jnp.sum(hidden[:, :, None] * wd, axis=1)         # [B, d]
+        y = y + gate[:, j][:, None] * tok
+    return y

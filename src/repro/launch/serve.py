@@ -16,6 +16,8 @@ fixed-size pages (``--page-size``) from a pool of ``--num-pages`` and
 admission is by free pages, so short requests stop reserving worst-case
 ``--max-len`` rows. Shrink ``--num-pages`` below the contiguous worst case
 (capacity x max_len / page_size) to trade headroom for concurrency.
+``--paged --gated`` is rejected at argument-parsing time (the gated
+early-exit decode path is not page-aware yet).
 
 ``--mesh dp=2,model=2`` serves the slot batch on a real device mesh: the
 engine jits every entry point with explicit in/out shardings (params tp
@@ -122,6 +124,13 @@ def main():
                          "this arch's exact serve-time dims — and persist "
                          "the winning policy to --policy")
     args = ap.parse_args()
+
+    # invalid flag combinations die HERE with an actionable message, not on
+    # an assert deep inside SlotEngine after the model has been built
+    if args.paged and args.gated:
+        ap.error("--paged cannot be combined with --gated: the gated "
+                 "early-exit decode path is not page-aware yet (ROADMAP.md "
+                 "follow-up) — drop one of the two flags")
 
     if args.autotune:
         arch_for_cells = get_arch(args.arch).reduced()

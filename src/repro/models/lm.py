@@ -65,9 +65,12 @@ def _init_layer(key, spec: BlockSpec, cfg: ArchConfig, dtype) -> Dict:
 
 def _apply_layer(p, x, spec: BlockSpec, cfg: ArchConfig, policy: xaif.PolicyLike,
                  state=None, mode: str = "train", cache_pos=None,
-                 page_table=None):
+                 page_table=None, live=None):
     """Returns (x, aux_loss, new_state). ``page_table`` [B, NP] routes
-    attention decode through the paged path (state is a Paged*Cache)."""
+    attention decode through the paged path (state is a Paged*Cache).
+    ``live`` [B] bool (decode only): slots that still matter — dead/retired
+    slots are masked out of MoE routing so their stale hidden states can't
+    consume expert capacity or skew the aux-loss counts."""
     h = rmsnorm(p["ln1"], x, policy, cfg.norm_eps)
     new_state = None
     if spec.mixer == "attn":
@@ -116,8 +119,18 @@ def _apply_layer(p, x, spec: BlockSpec, cfg: ArchConfig, policy: xaif.PolicyLike
     if spec.ffn != "none":
         h2 = rmsnorm(p["ln2"], x, policy, cfg.norm_eps)
         if spec.ffn == "moe":
-            groups = 1 if h2.shape[1] == 1 else None
-            out2, aux = moe_mod.apply_moe(p["ffn"], h2, cfg, policy, groups)
+            if mode == "decode" and cfg.moe.dropless_decode:
+                # DROPLESS decode: per-token dispatch through the
+                # ``moe_decode`` XAIF op — no capacity constant, no drops,
+                # so a slot's tokens never depend on its co-batch (the
+                # serve engine's composition-independence contract)
+                out2, aux = moe_mod.apply_moe_decode(p["ffn"], h2, cfg,
+                                                     policy, valid=live)
+            else:
+                groups = 1 if h2.shape[1] == 1 else None
+                v2 = None if live is None else live[:, None]
+                out2, aux = moe_mod.apply_moe(p["ffn"], h2, cfg, policy,
+                                              groups, valid=v2)
         else:
             out2 = apply_mlp(p["ffn"], h2, policy)
         x = x + out2
@@ -205,7 +218,8 @@ def _remat_wrap(fn, remat: str):
 
 
 def _scan_segment(slots, x, sb_start, sb_end, cfg, policy, remat="nothing",
-                  mode="train", states=None, cache_pos=None, page_table=None):
+                  mode="train", states=None, cache_pos=None, page_table=None,
+                  live=None):
     """Run super-blocks [sb_start, sb_end). Returns (x, aux, new_states)."""
     if sb_end == sb_start:
         return x, jnp.zeros((), jnp.float32), states
@@ -225,7 +239,7 @@ def _scan_segment(slots, x, sb_start, sb_end, cfg, policy, remat="nothing",
             st = slot_states[j] if has_state else None
             x, a, ns = _apply_layer(slot_params[j], x, spec, cfg, policy,
                                     state=st, mode=mode, cache_pos=cache_pos,
-                                    page_table=page_table)
+                                    page_table=page_table, live=live)
             aux = aux + a
             new_states.append(ns)
         out = tuple(new_states) if has_state else None
@@ -544,12 +558,19 @@ def forward_prefill(params, inputs, cfg: ArchConfig, policy: xaif.PolicyLike,
 
 
 def forward_decode(params, tokens, cfg: ArchConfig, policy: xaif.PolicyLike,
-                   cache, with_exits: bool = True):
+                   cache, with_exits: bool = True, live=None):
     """One decode step. tokens [B, 1] (or [B, 1, d] embeddings).
 
     ``cache`` is an LMCache (contiguous per-slot KV) or a PagedLMCache
     (page-pool KV attended via the page table — same numerics, page-granular
-    memory). Returns (final_logits [B, V], exit_logits tuple, new_cache).
+    memory). ``live`` [B] bool (optional): the serve engine's occupied,
+    not-done slots — dead slots are masked out of MoE routing. On the
+    default DROPLESS decode path masking can never change a live slot's
+    output (no state is shared across tokens); with
+    ``MoEConfig.dropless_decode=False`` the grouped path shares one
+    capacity group, so masking frees capacity dead slots were stealing —
+    live outputs there depend on the mask by design.
+    Returns (final_logits [B, V], exit_logits tuple, new_cache).
     """
     paged = isinstance(cache, PagedLMCache)
     page_table = cache.page_table if paged else None
@@ -563,7 +584,8 @@ def forward_decode(params, tokens, cfg: ArchConfig, policy: xaif.PolicyLike,
     for i in range(cfg.first_k_dense):
         x, _, ns = _apply_layer(params["prefix"][i], x, cfg.layer_spec(i), cfg,
                                 policy, state=cache.prefix[i], mode="decode",
-                                cache_pos=cache_pos, page_table=page_table)
+                                cache_pos=cache_pos, page_table=page_table,
+                                live=live)
         new_prefix.append(ns)
         if (i + 1) in exit_points:
             exit_lg.append(_exit_logits(params, x, exit_points[i + 1], cfg,
@@ -572,7 +594,8 @@ def forward_decode(params, tokens, cfg: ArchConfig, policy: xaif.PolicyLike,
     for sb_start, sb_end, exit_i in _segments(cfg):
         x, _, seg_states = _scan_segment(
             params["slots"], x, sb_start, sb_end, cfg, policy, mode="decode",
-            states=cache.slots, cache_pos=cache_pos, page_table=page_table)
+            states=cache.slots, cache_pos=cache_pos, page_table=page_table,
+            live=live)
         if sb_end > sb_start:
             new_slots = jax.tree_util.tree_map(
                 lambda full, seg: jax.lax.dynamic_update_slice_in_dim(
@@ -635,7 +658,8 @@ def forward_decode_gated(params, tokens, cfg: ArchConfig, policy: xaif.PolicyLik
     ``live`` [B] bool: slots that still matter (the slot engine's occupied,
     not-done rows). Dead slots can't veto the whole-batch skip — their
     outputs are discarded by the caller and their cache rows are either
-    overwritten before becoming readable or belong to retired requests.
+    overwritten before becoming readable or belong to retired requests —
+    and they are masked out of MoE routing like in ``forward_decode``.
 
     Returns (logits [B, V], exit_mask [B], new_cache).
     """
@@ -649,14 +673,14 @@ def forward_decode_gated(params, tokens, cfg: ArchConfig, policy: xaif.PolicyLik
     for i in range(cfg.first_k_dense):
         x, _, ns = _apply_layer(params["prefix"][i], x, cfg.layer_spec(i), cfg,
                                 policy, state=cache.prefix[i], mode="decode",
-                                cache_pos=cache_pos)
+                                cache_pos=cache_pos, live=live)
         new_prefix.append(ns)
     exit_sb = (cfg.early_exit.exit_layers[0] - cfg.first_k_dense) // cfg.period
     n_sb = cfg.num_superblocks
     # segment 1: up to the exit head
     x, _, pre_states = _scan_segment(params["slots"], x, 0, exit_sb, cfg,
                                      policy, mode="decode", states=cache.slots,
-                                     cache_pos=cache_pos)
+                                     cache_pos=cache_pos, live=live)
     exit_lg = _exit_logits(params, x, 0, cfg, policy)[:, 0]
     exit_mask, _ = should_exit(exit_lg, cfg.early_exit.entropy_threshold, policy)
     gate = exit_mask if live is None else (exit_mask | ~live)
@@ -665,7 +689,8 @@ def forward_decode_gated(params, tokens, cfg: ArchConfig, policy: xaif.PolicyLik
     def cont(ops):
         x_in, rest_states = ops
         x2, _, new_rest = _scan_segment_pre(rest_states, params, x_in, exit_sb,
-                                            n_sb, cfg, policy, cache_pos)
+                                            n_sb, cfg, policy, cache_pos,
+                                            live=live)
         lg = _head(params, x2, cfg, policy)[:, 0]
         lg = jnp.where(exit_mask[:, None], exit_lg, lg)
         return lg, new_rest
@@ -695,7 +720,7 @@ def forward_decode_gated(params, tokens, cfg: ArchConfig, policy: xaif.PolicyLik
 
 
 def _scan_segment_pre(states_sliced, params, x, sb_start, sb_end, cfg, policy,
-                      cache_pos):
+                      cache_pos, live=None):
     """Like _scan_segment(mode=decode) but takes pre-sliced states."""
     sliced = jax.tree_util.tree_map(
         lambda a: a[sb_start:sb_end], params["slots"])
@@ -707,7 +732,7 @@ def _scan_segment_pre(states_sliced, params, x, sb_start, sb_end, cfg, policy,
         for j, spec in enumerate(cfg.block_pattern):
             x, a, ns = _apply_layer(slot_params[j], x, spec, cfg, policy,
                                     state=slot_states[j], mode="decode",
-                                    cache_pos=cache_pos)
+                                    cache_pos=cache_pos, live=live)
             aux = aux + a
             new_states.append(ns)
         return (x, aux), tuple(new_states)

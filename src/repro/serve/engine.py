@@ -42,12 +42,15 @@ The legacy ``generate`` remains the reference loop (tests compare the slot
 engine against it token-for-token); its per-token ``float(info[k])`` host
 sync is fixed — statistics stay on device until one fetch at the end.
 
-Known caveat (inherited from the seed's batched loop, not introduced here):
-capacity-dropping MoE shares one expert-capacity group across the decode
-batch, so a request's tokens can depend on its co-batch. With a STATIC
-batch the slot engine is token-identical to the reference; under backfill
-the composition changes and MoE archs may drop differently. Dropless MoE
-decode (per-sequence groups) is an open item — see ROADMAP.md.
+Token identity is COMPOSITION-INDEPENDENT for every arch family: per-slot
+cache positions, per-slot PRNG keys, and — since the dropless MoE decode
+path (``models/moe.py`` ``apply_moe_decode`` through the ``moe_decode``
+XAIF op) — per-token expert dispatch with no shared capacity group, so a
+request's greedy tokens never depend on which other requests are batched
+or backfilled beside it. Dead/retired slots are masked out of MoE routing
+(``live`` below), so their stale hidden states can't skew the aux counts
+either. (The seed's batched loop shared one expert-capacity group across
+the decode batch; that caveat is gone.)
 """
 from __future__ import annotations
 
@@ -290,9 +293,10 @@ def make_decode_chunk(run: RunConfig, steps: int, gated: bool = False,
     top-k through the per-slot keys in ``DecodeState.rng`` when ``sampler``
     is given), early-exit merge, per-slot done/budget bookkeeping,
     statistics accumulation. Done/empty slots keep feeding their frozen
-    token (their output is discarded and their cache position is pinned, so
-    the valid prefix never corrupts); the caller performs ONE host fetch of
-    (tokens [S, steps], state) per chunk.
+    token (their output is discarded, their cache position is pinned so the
+    valid prefix never corrupts, and they are masked out of MoE routing so
+    their stale hidden states can't skew the aux counts); the caller
+    performs ONE host fetch of (tokens [S, steps], state) per chunk.
     """
     cfg, policy = run.arch, run.accel
     n_layers = cfg.num_layers
@@ -313,7 +317,7 @@ def make_decode_chunk(run: RunConfig, steps: int, gated: bool = False,
                                    1.0 - el / n_layers, 0.0)
         else:
             logits, exit_lgs, new_cache = lm.forward_decode(
-                params, st.tokens[:, None], cfg, policy, cache)
+                params, st.tokens[:, None], cfg, policy, cache, live=live)
             if cfg.early_exit is not None and exit_lgs:
                 logits, exit_idx, _ = merge_exit_logits(
                     logits, exit_lgs, cfg.early_exit, policy)
@@ -430,8 +434,14 @@ class SlotEngine:
         self.sample_seed = sample_seed
         self._sampler = make_sampler(temperature, top_k)
         # prefix layers inherit their mixer from the pattern, so all-attn
-        # patterns are pad-safe end to end; recurrent mixers are not
-        self.pad_prompts = all(b.mixer == "attn" for b in cfg.block_pattern)
+        # patterns are pad-safe end to end; recurrent mixers are not, and
+        # neither is capacity-bounded MoE PREFILL — pad tokens would route
+        # into the experts and the per-group capacity constant scales with
+        # the PADDED length, so bucketing would change which tokens drop.
+        # MoE archs prefill at exact length (one trace per distinct prompt
+        # length), keeping every arch's prefill equal to the solo reference.
+        self.pad_prompts = (all(b.mixer == "attn" for b in cfg.block_pattern)
+                            and cfg.moe is None)
         self.prompt_bucket = prompt_bucket if self.pad_prompts else 1
         self.decode_traces = 0
         self.prefill_traces = 0

@@ -1,5 +1,8 @@
 """MoE dispatch correctness: capacity accounting, gate weighting, dropping,
-shared experts, and equivalence to a dense per-token loop oracle."""
+shared experts, equivalence to a dense per-token loop oracle — and the
+dropless decode path (PR 5): the ``moe_decode`` op, per-slot composition
+independence, dead-slot masking in both dispatch paths, and the
+``renorm_kept`` gate-accounting knob."""
 import dataclasses
 
 import jax
@@ -8,6 +11,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import AccelConfig, ArchConfig, BlockSpec, MoEConfig
+from repro.core import xaif
 from repro.models import moe as moe_mod
 
 ACCEL = AccelConfig()
@@ -80,6 +84,206 @@ def test_moe_decode_single_group():
     ref = _oracle(params, x, cfg)
     np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-4,
                                atol=1e-4)
+
+
+def test_moe_decode_dropless_matches_dense_oracle():
+    """The dropless decode path equals the dense per-token oracle even
+    under capacity pressure that would force the grouped path to drop —
+    there IS no capacity at decode."""
+    cfg = _cfg(shared=2, cap=0.25)                # grouped path would drop
+    params = moe_mod.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 1, cfg.d_model))
+    y, aux = moe_mod.apply_moe_decode(params, x, cfg, ACCEL)
+    ref = _oracle(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-4,
+                               atol=1e-4)
+    assert float(aux) > 0
+    # and the grouped path at this capacity really does diverge from the
+    # oracle (the bug the dropless path removes)
+    yg, _ = moe_mod.apply_moe(params, x, cfg, ACCEL, groups=1)
+    assert float(jnp.max(jnp.abs(yg - ref))) > 1e-6
+
+
+def test_moe_decode_composition_independent_bitwise():
+    """THE serving contract: row b of a batched decode equals a solo run of
+    that row, bit for bit — co-batch can never perturb a slot's output."""
+    cfg = _cfg(shared=2, cap=0.5)
+    params = moe_mod.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 1, cfg.d_model))
+    full, _ = moe_mod.apply_moe_decode(params, x, cfg, ACCEL)
+    for i in range(x.shape[0]):
+        solo, _ = moe_mod.apply_moe_decode(params, x[i:i + 1], cfg, ACCEL)
+        np.testing.assert_array_equal(np.asarray(solo)[0],
+                                      np.asarray(full)[i], str(i))
+
+
+def test_moe_decode_dead_slot_mask():
+    """Toggling a dead slot's hidden state changes neither the live slots'
+    outputs nor the masked aux loss."""
+    cfg = _cfg()
+    params = moe_mod.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (6, 1, cfg.d_model))
+    valid = jnp.asarray([False, True, True, False, True, True])
+    junk = x.at[0].set(1e3).at[3].set(-1e3)
+    y1, a1 = moe_mod.apply_moe_decode(params, x, cfg, ACCEL, valid=valid)
+    y2, a2 = moe_mod.apply_moe_decode(params, junk, cfg, ACCEL, valid=valid)
+    live = np.asarray(valid)
+    np.testing.assert_array_equal(np.asarray(y1)[live], np.asarray(y2)[live])
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+
+def test_grouped_moe_valid_mask_isolates_dead_slots():
+    """Satellite bugfix: in the legacy batch-grouped decode path a retired
+    slot's stale hidden state still routed, occupied expert capacity and
+    inflated the aux counts. With ``valid`` it cannot: dead content changes
+    neither live outputs nor the aux loss — while the UNMASKED path
+    demonstrably lets dead slots steal capacity from live ones."""
+    cfg = _cfg(e=4, k=2, cap=0.5)                 # tight shared capacity
+    params = moe_mod.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 1, cfg.d_model))
+    # dead slots FIRST: token-major priority means earlier rows win capacity
+    valid = jnp.asarray([False, False] + [True] * 6)[:, None]
+    junk = x.at[0].set(x[5] * 3.0).at[1].set(-x[4] * 3.0)
+    y1, a1 = moe_mod.apply_moe(params, x, cfg, ACCEL, groups=1, valid=valid)
+    y2, a2 = moe_mod.apply_moe(params, junk, cfg, ACCEL, groups=1,
+                               valid=valid)
+    live = np.asarray(valid)[:, 0]
+    np.testing.assert_array_equal(np.asarray(y1)[live], np.asarray(y2)[live])
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    # the seed behavior (no mask): dead content CAN change live outputs
+    y3, _ = moe_mod.apply_moe(params, x, cfg, ACCEL, groups=1)
+    y4, _ = moe_mod.apply_moe(params, junk, cfg, ACCEL, groups=1)
+    assert float(jnp.max(jnp.abs((y3 - y4)[live]))) > 1e-6
+
+
+def _capacity_oracle(params, x, cfg, renorm_kept):
+    """Independent numpy reimplementation of the capacity path: token-major
+    priority ranking, per-sequence groups, optional kept-gate renorm."""
+    m = cfg.moe
+    b, t, d = x.shape
+    probs = jax.nn.softmax(
+        x.astype(jnp.float32) @ params["router"].astype(jnp.float32), -1)
+    gates, idx = jax.lax.top_k(probs, m.top_k)
+    gates = np.asarray(gates / jnp.sum(gates, -1, keepdims=True))
+    idx = np.asarray(idx)
+    capacity = max(1, int(np.ceil(t * m.top_k / m.num_experts
+                                  * m.capacity_factor)))
+    out = np.zeros((b, t, d), np.float32)
+    for bi in range(b):
+        fills = {e: 0 for e in range(m.num_experts)}
+        keep = np.zeros((t, m.top_k), bool)
+        for ti in range(t):                       # token-major priority
+            for j in range(m.top_k):
+                e = int(idx[bi, ti, j])
+                if fills[e] < capacity:
+                    keep[ti, j] = True
+                    fills[e] += 1
+        w = gates[bi] * keep
+        if renorm_kept:
+            w = w / np.maximum(w.sum(-1, keepdims=True), 1e-9)
+        for ti in range(t):
+            for j in range(m.top_k):
+                if not keep[ti, j]:
+                    continue
+                e = int(idx[bi, ti, j])
+                xe = x[bi, ti]
+                g = jax.nn.silu((xe @ params["w_gate_e"][e]
+                                 ).astype(jnp.float32))
+                u = (xe @ params["w_up_e"][e]).astype(jnp.float32)
+                ye = (g * u).astype(x.dtype) @ params["w_down_e"][e]
+                out[bi, ti] += w[ti, j] * np.asarray(ye, np.float32)
+    return out
+
+
+@pytest.mark.parametrize("renorm_kept", [False, True])
+def test_capacity_gate_renorm_behaviors_pinned(renorm_kept):
+    """Gate-weight accounting under drops: the default loses a dropped
+    expert's share (gates renormalized over top-k BEFORE dropping);
+    ``renorm_kept`` redistributes it over the kept experts. Both behaviors
+    are pinned against an independent numpy oracle."""
+    cfg = _cfg(cap=0.5)
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, renorm_kept=renorm_kept))
+    params = moe_mod.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    y, _ = moe_mod.apply_moe(params, x, cfg, ACCEL)
+    expect = _capacity_oracle(params, x, cfg, renorm_kept)
+    np.testing.assert_allclose(np.asarray(y), expect, rtol=1e-4, atol=1e-4)
+
+
+def test_renorm_kept_differs_only_under_drops():
+    params_cfg = _cfg(cap=16.0)                   # ample: no drops
+    params = moe_mod.init_moe(jax.random.PRNGKey(0), params_cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16,
+                                                  params_cfg.d_model))
+    outs = {}
+    for cap in (16.0, 0.5):
+        for flag in (False, True):
+            cfg = _cfg(cap=cap)
+            cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+                cfg.moe, renorm_kept=flag))
+            outs[(cap, flag)], _ = moe_mod.apply_moe(params, x, cfg, ACCEL)
+    np.testing.assert_allclose(np.asarray(outs[(16.0, False)]),
+                               np.asarray(outs[(16.0, True)]),
+                               rtol=1e-5, atol=1e-5)  # no drops: same
+    diff = float(jnp.max(jnp.abs(outs[(0.5, False)] - outs[(0.5, True)])))
+    assert diff > 1e-6                            # drops: redistribution
+
+
+def test_capacity_drop_count():
+    cfg = _cfg(cap=0.25)
+    params = moe_mod.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 1, cfg.d_model))
+    tight = int(moe_mod.capacity_drop_count(params, x, cfg, groups=1))
+    assert tight > 0                              # shared group drops
+    ample = int(moe_mod.capacity_drop_count(
+        params, x, _cfg(cap=16.0), groups=1))
+    assert ample == 0
+    # masking dead slots frees their share of the count
+    valid = jnp.asarray([True] * 4 + [False] * 4)[:, None]
+    masked = int(moe_mod.capacity_drop_count(params, x, cfg, groups=1,
+                                             valid=valid))
+    assert masked <= tight
+
+
+def test_moe_decode_op_registered_and_bucketed():
+    assert "moe_decode" in xaif.ops()
+    assert set(xaif.backends_for("moe_decode")) == {"ref", "pallas"}
+    small = ((4, 64), (4, 2), (4, 2), (8, 64, 32), (8, 64, 32), (8, 32, 64))
+    assert xaif.shape_bucket("moe_decode", small) == "e_s"
+    big = ((4, 64), (4, 8), (4, 8), (128, 64, 32), (128, 64, 32),
+           (128, 32, 64))
+    assert xaif.shape_bucket("moe_decode", big) == "e_l"
+
+
+def test_moe_decode_pallas_matches_ref():
+    """Sorted ragged dispatch == per-token gather, across block sizes and a
+    skewed expert histogram (every token on one expert: the padded-run
+    layout must still cover it)."""
+    from repro.kernels.moe_decode.moe_decode import moe_decode_pallas
+    from repro.kernels.moe_decode.ref import moe_decode_ref
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    b, k, e, d, h = 6, 2, 8, 32, 16
+    x = jax.random.normal(ks[0], (b, d))
+    wg = jax.random.normal(ks[1], (e, d, h)) * d ** -0.5
+    wu = jax.random.normal(ks[2], (e, d, h)) * d ** -0.5
+    wd = jax.random.normal(ks[3], (e, h, d)) * h ** -0.5
+    gate, idx = jax.lax.top_k(
+        jax.nn.softmax(jax.random.normal(ks[4], (b, e)), -1), k)
+    gate = gate / jnp.sum(gate, -1, keepdims=True)
+    ref = moe_decode_ref(x, idx, gate, wg, wu, wd)
+    for bt in (8, 16):
+        pal = moe_decode_pallas(x, idx, gate, wg, wu, wd, bt=bt,
+                                interpret=True)
+        np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+    # fully collapsed routing: all assignments land on expert 3
+    idx_skew = jnp.full_like(idx, 3).at[:, 1].set(5)
+    ref = moe_decode_ref(x, idx_skew, gate, wg, wu, wd)
+    pal = moe_decode_pallas(x, idx_skew, gate, wg, wu, wd, bt=8,
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
 
 
 def test_moe_aux_loss_balanced_vs_skewed():

@@ -103,10 +103,36 @@ def test_slot_engine_matches_host_loop_with_backfill():
             _reference_tokens(run, params, r, max_len=32), str(r.rid))
 
 
+MOE_ARCHS = ("qwen3-moe-30b-a3b", "deepseek-v2-lite-16b")
+
+
+@pytest.mark.parametrize("arch", MOE_ARCHS)
+def test_moe_slot_engine_matches_host_loop_with_backfill(arch):
+    """Dropless MoE decode (PR 5): MoE archs join the token-identity
+    matrix. Under backfill churn every request's tokens equal a solo run of
+    the reference loop — the capacity-sharing carve-out documented since
+    PR 1 is gone (decode dispatches the per-token ``moe_decode`` op; the
+    engine prefills MoE archs at exact length, since capacity-bounded
+    prefill is not pad-safe)."""
+    cfg = get_arch(arch).reduced()
+    run = _run_for(cfg)
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    engine = SlotEngine(run, capacity=3, max_len=32, chunk=4)
+    reqs = _requests(cfg, 6)
+    report = serve(engine, params, reqs)
+    assert engine.decode_traces == 1
+    for r in report.requests:
+        assert len(r.tokens) == r.max_new_tokens
+        np.testing.assert_array_equal(
+            np.asarray(r.tokens),
+            _reference_tokens(run, params, r, max_len=32), str(r.rid))
+
+
 def test_slot_engine_matches_host_loop_static_batch_hybrid():
     """Hybrid attn+Mamba(+MoE) arch with a STATIC slot composition equals
-    the seed's batched loop exactly (MoE shares expert capacity across the
-    batch, so composition must match for bitwise identity)."""
+    the seed's batched loop exactly (with dropless MoE decode the batched
+    loop itself dispatches per-token, so batched and slot decode agree
+    bit for bit)."""
     cfg = get_arch("jamba-v0.1-52b").reduced()
     run = _run_for(cfg)
     params = lm.init_lm(jax.random.PRNGKey(0), cfg)
@@ -281,6 +307,26 @@ def test_mesh_engine_token_identity_with_backfill(name, shape):
 
 
 @needs_mesh
+def test_mesh_moe_engine_token_identity_with_backfill():
+    """MoE arch on a dp2xtp2 mesh: expert weights shard E over the model
+    axis (the ``ep`` rules), decode dispatches the dropless ``moe_decode``
+    op — and greedy tokens stay identical to the single-device engine under
+    backfill churn (the same identity bar as PR 4, now covering MoE)."""
+    cfg = get_arch("qwen3-moe-30b-a3b").reduced()
+    run = _run_for(cfg)
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    single = SlotEngine(run, capacity=4, max_len=32, chunk=4)
+    ref = serve(single, params, _requests(cfg, 7))
+    ref_toks = {r.rid: r.tokens for r in ref.requests}
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    engine = SlotEngine(run, capacity=4, max_len=32, chunk=4,
+                        mesh=mesh, sharding=_serve_policy())
+    report = serve(engine, params, _requests(cfg, 7))
+    assert engine.decode_traces == 1
+    assert {r.rid: r.tokens for r in report.requests} == ref_toks
+
+
+@needs_mesh
 def test_mesh_decode_caches_donated():
     """Sharded caches are still donated: after a decode chunk the previous
     cache's buffers are invalidated (updated in place, not copied)."""
@@ -364,6 +410,34 @@ def test_greedy_engine_leaves_rng_untouched():
                                        np.arange(5, dtype=np.int32), 0, 8)
     cache, st, _ = engine.decode(params, cache, st)
     np.testing.assert_array_equal(np.asarray(st.rng), rng0)
+
+
+# ---------------------------------------------------------------------------
+# Invalid flag combinations: CLI-time validation + engine-level guard
+# ---------------------------------------------------------------------------
+
+
+def test_launch_serve_rejects_paged_gated_at_parse_time(monkeypatch, capsys):
+    """``--paged --gated`` must die in argparse with an actionable message,
+    not on a bare assert deep inside SlotEngine after the model is built."""
+    from repro.launch import serve as serve_launch
+    monkeypatch.setattr("sys.argv", ["serve", "--arch", "yi-9b",
+                                     "--paged", "--gated"])
+    with pytest.raises(SystemExit) as ei:
+        serve_launch.main()
+    assert ei.value.code == 2                     # argparse error exit
+    err = capsys.readouterr().err
+    assert "page-aware" in err and "--gated" in err
+
+
+def test_engine_still_guards_gated_paged_direct_construction():
+    """The engine-level assert stays as the last line of defense for direct
+    construction (the CLI check is a convenience, not the invariant)."""
+    cfg = get_arch("yi-9b").reduced()
+    run = _run_for(cfg)
+    with pytest.raises(AssertionError, match="page-aware"):
+        SlotEngine(run, capacity=2, max_len=24, chunk=2, gated=True,
+                   paged=True)
 
 
 def test_poisson_stream_serves_all_requests():
