@@ -30,6 +30,13 @@ batch-grouped capacity decode — recording tok/s, capacity-drop counts
 (asserted 0 for dropless) and solo-reference token identity (asserted for
 dropless; the grouped path's whole point of failure).
 
+The PREFIX comparison (``prefix_table``) serves Zipf shared-prefix
+streams (s=0 all-unique, s=1.1 head-heavy common prefixes) through the
+paged engine at a fixed page budget with the radix prefix index on vs
+off — asserting greedy token identity, >=1.5x prefill-compute reduction
+(bucketed tokens pushed through prefill) and a peak-page saving on the
+shared stream.
+
 Every configuration is measured WARM (each runs the full workload once to
 compile, then once timed), so the comparison is steady-state decode
 throughput, not compile time. Emits ``name,us_per_call,derived`` CSV rows
@@ -317,6 +324,119 @@ def moe_table(arch: str = "qwen3-moe-30b-a3b", capacity: int = 4,
     return out
 
 
+def _zipf_prefix_requests(cfg, num: int, s: float, prefix_len: int,
+                          pool: int, seed: int):
+    """Shared-prefix workload: each request = one of ``pool`` common
+    prefixes (picked with Zipf(s) popularity — s=0 means every request
+    gets its OWN prefix, no reuse possible) + a unique random suffix."""
+    from repro.serve.scheduler import Request
+    rng = np.random.default_rng(seed)
+    n_prefix = num if s == 0 else pool
+    prefixes = [rng.integers(0, cfg.vocab_size, (prefix_len,),
+                             dtype=np.int32) for _ in range(n_prefix)]
+    if s == 0:
+        picks = np.arange(num)                   # one each: all-unique
+    else:
+        w = 1.0 / np.arange(1, pool + 1) ** s    # Zipf popularity
+        picks = rng.choice(pool, size=num, p=w / w.sum())
+    out = []
+    for i in range(num):
+        suffix = rng.integers(0, cfg.vocab_size,
+                              (int(rng.integers(4, 17)),), dtype=np.int32)
+        out.append(Request(
+            rid=i, prompt=np.concatenate([prefixes[picks[i]], suffix]),
+            max_new_tokens=int(rng.integers(8, 17)), arrival=0.0))
+    return out
+
+
+def prefix_table(arch: str = "chatglm3-6b", capacity: int = 8,
+                 max_len: int = 128, page_size: int = 16,
+                 num_requests: int = 24, prefix_len: int = 48,
+                 seed: int = 0) -> Dict[str, Dict]:
+    """Prefix sharing vs no sharing at the SAME page budget (ROADMAP
+    "Prefix sharing and copy-on-write pages").
+
+    Two Zipf shared-prefix streams — s=0 (every prompt opens with its own
+    unique prefix: sharing CAN'T trigger, measuring pure index overhead)
+    and s=1.1 (a head-heavy pool of common prefixes: the system-prompt
+    serving shape) — each served twice through the paged engine at a fixed
+    ``num_pages``, with the radix prefix index on and off. Greedy tokens
+    are asserted identical per stream; the sharing engine's win is
+    recorded as the prefill-compute ratio (bucketed tokens actually pushed
+    through prefill — FLOPs, not wall noise), prefill wall time, admitted
+    concurrency and peak distinct resident pages at the fixed budget.
+    """
+    from repro.configs.base import (AccelConfig, RunConfig, SHAPES_BY_NAME,
+                                    get_arch)
+    from repro.models import lm
+    from repro.serve.engine import SlotEngine
+    from repro.serve.scheduler import Request, serve
+    cfg = get_arch(arch).reduced()
+    run = RunConfig(arch=cfg, shape=SHAPES_BY_NAME["decode_32k"],
+                    accel=AccelConfig())
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    num_pages = capacity * (max_len // page_size) // 2 + 1   # tight budget
+
+    out: Dict[str, Dict] = {}
+    for s in (0.0, 1.1):
+        requests = _zipf_prefix_requests(cfg, num_requests, s, prefix_len,
+                                         pool=4, seed=seed)
+        toks = {}
+        for sharing in (False, True):
+            engine = SlotEngine(run, capacity=capacity, max_len=max_len,
+                                chunk=8, paged=True, page_size=page_size,
+                                num_pages=num_pages, prefix_sharing=sharing)
+            # time the prefill entry points (blocking) so the row records
+            # prefill wall alongside the FLOP-proportional token counter
+            engine.prefill_s = 0.0
+            for attr in ("prefill_into", "prefill_into_shared"):
+                orig = getattr(engine, attr)
+
+                def timed(*a, _orig=orig, _eng=engine, **k):
+                    t0 = time.perf_counter()
+                    res = jax.block_until_ready(_orig(*a, **k))
+                    _eng.prefill_s += time.perf_counter() - t0
+                    return res
+                setattr(engine, attr, timed)
+
+            def run_once():
+                reqs = [Request(rid=r.rid, prompt=r.prompt,
+                                max_new_tokens=r.max_new_tokens,
+                                arrival=0.0) for r in requests]
+                return serve(engine, params, reqs)
+
+            run_once()                                   # warm (compiles)
+            engine.prefill_tokens = 0
+            engine.prefill_s = 0.0
+            t0 = time.perf_counter()
+            report = run_once()
+            wall = time.perf_counter() - t0
+            name = f"zipf{s:g}_" + ("sharing" if sharing else "baseline")
+            toks[sharing] = {r.rid: list(r.tokens) for r in report.requests}
+            out[name] = {
+                "zipf_s": s,
+                "sharing": sharing,
+                "decode_tokens": report.decode_tokens,
+                "wall_s": wall,
+                "tok_per_s": report.decode_tokens / max(wall, 1e-9),
+                "prefill_tokens": int(engine.prefill_tokens),
+                "prefill_s": engine.prefill_s,
+                "max_concurrency": int(report.stats["max_concurrency"]),
+                "peak_pages": int(report.stats["peak_pages"]),
+                "num_pages": num_pages - 1,              # minus scratch
+                "shared_admissions": int(
+                    report.stats.get("shared_admissions", 0)),
+                "shared_tokens": int(report.stats.get("shared_tokens", 0)),
+            }
+        assert toks[False] == toks[True], (
+            f"prefix sharing diverged from the no-sharing paged engine "
+            f"at zipf s={s}")
+        for sharing in (False, True):
+            out[f"zipf{s:g}_" + ("sharing" if sharing else "baseline")][
+                "token_identical"] = True
+    return out
+
+
 # mesh shapes the per-mesh throughput table tries, in (data, model) sizes;
 # shapes that need more devices than are visible are skipped
 MESH_SHAPES = (("1x1", 1, 1), ("dp2", 2, 1), ("tp2", 1, 2),
@@ -454,6 +574,31 @@ def main():
           f"(grouped drop count at the decode batch: "
           f"{mo['grouped']['decode_drop_count']})")
 
+    # prefix sharing vs no sharing at a fixed page budget (the PR 6 radix
+    # index + COW admission path)
+    pf = prefix_table(args.arch)
+    for name, r in sorted(pf.items()):
+        print(f"serving/prefix_{name},{r['wall_s']*1e6:.2f},"
+              f"tok_per_s={r['tok_per_s']:.1f};"
+              f"prefill_tokens={r['prefill_tokens']};"
+              f"prefill_ms={r['prefill_s']*1e3:.1f};"
+              f"concurrency={r['max_concurrency']};"
+              f"peak_pages={r['peak_pages']}/{r['num_pages']}")
+    prefill_gain = (pf["zipf1.1_baseline"]["prefill_tokens"]
+                    / max(pf["zipf1.1_sharing"]["prefill_tokens"], 1))
+    page_savings = (pf["zipf1.1_baseline"]["peak_pages"]
+                    - pf["zipf1.1_sharing"]["peak_pages"])
+    print(f"prefix sharing at zipf s=1.1: {prefill_gain:.2f}x less prefill "
+          f"compute, {page_savings} fewer peak pages, "
+          f"{pf['zipf1.1_sharing']['shared_admissions']} shared admissions, "
+          f"token-identical: {pf['zipf1.1_sharing']['token_identical']}")
+    assert prefill_gain >= 1.5, (
+        f"prefix sharing must cut prefill compute >=1.5x on the zipf-1.1 "
+        f"shared-prefix stream (got {prefill_gain:.2f}x)")
+    assert page_savings > 0, (
+        "prefix sharing must reduce peak resident pages at a fixed KV "
+        f"budget (got {page_savings})")
+
     # per-mesh throughput: jax pins the device count at first init, so the
     # mesh table runs in a SUBPROCESS with a forced 4-device host (the
     # dryrun plays the same trick for its 512-device placeholders). The
@@ -507,6 +652,9 @@ def main():
             "paged_tok_per_s_gain": tok_gain,
             "slot_vs_seed_ratio": slot_ratio,
             "moe_decode": mo,
+            "prefix_sharing": pf,
+            "prefix_prefill_compute_gain": prefill_gain,
+            "prefix_peak_page_savings": page_savings,
             "mesh_serving": m,
         }
         with open(args.json, "w") as f:

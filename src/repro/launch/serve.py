@@ -31,9 +31,17 @@ force virtual devices first:
         PYTHONPATH=src python -m repro.launch.serve --arch chatglm3-6b \
         --mesh dp=2,model=2
 
-``--temperature`` / ``--top-k`` switch the scan body from greedy argmax to
-temperature / top-k sampling through per-slot PRNG keys (``--sample-seed``
-makes streams reproducible).
+``--paged --prefix-sharing`` turns on the radix prefix index: prompts are
+matched against KV page chains left resident by earlier requests, matched
+full pages are mapped into the new request's page-table row (refcounted,
+copy-on-write at the fork page) and only the unshared suffix is prefilled.
+``--shared-prefix-len N`` prepends a common N-token prefix to every prompt
+to exercise it. Greedy tokens are identical with sharing on or off.
+
+``--temperature`` / ``--top-k`` / ``--top-p`` switch the scan body from
+greedy argmax to temperature / top-k / nucleus sampling through per-slot
+PRNG keys (``--sample-seed`` makes streams reproducible; a per-request
+``Request.seed`` overrides the slot key for placement-independent replay).
 
 Backend selection: by default the static all-"ref" AccelConfig. Pass
 ``--policy PATH`` to serve under a persisted shape-aware DispatchPolicy
@@ -114,6 +122,18 @@ def main():
                     help="sampling temperature (0 = greedy argmax)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="top-k truncation for sampled decode (0 = full)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus (top-p) truncation for sampled decode "
+                         "(1.0 = full distribution)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="radix-match prompts against resident KV page "
+                         "chains; matched prefixes are mapped (refcounted, "
+                         "copy-on-write boundary) and only the unshared "
+                         "suffix is prefilled (requires --paged)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="give every request a common prompt prefix of "
+                         "this many tokens (demo workload for "
+                         "--prefix-sharing)")
     ap.add_argument("--sample-seed", type=int, default=0,
                     help="base seed of the per-slot sampling PRNG keys")
     ap.add_argument("--seed", type=int, default=0)
@@ -131,6 +151,13 @@ def main():
         ap.error("--paged cannot be combined with --gated: the gated "
                  "early-exit decode path is not page-aware yet (ROADMAP.md "
                  "follow-up) — drop one of the two flags")
+    if args.prefix_sharing and not args.paged:
+        ap.error("--prefix-sharing requires --paged: shared prefixes are "
+                 "mapped as refcounted KV pages, which only exist in the "
+                 "paged engine")
+    if args.prefix_sharing and args.gated:
+        ap.error("--prefix-sharing cannot be combined with --gated "
+                 "(implied by --paged being incompatible with --gated)")
 
     if args.autotune:
         arch_for_cells = get_arch(args.arch).reduced()
@@ -157,14 +184,21 @@ def main():
     params = lm.init_lm(jax.random.PRNGKey(0), cfg)
     gated = args.gated and all(b.mixer == "attn" for b in cfg.block_pattern)
 
-    assert args.prompt_len_max + args.new_tokens <= args.max_len, \
-        "--max-len must fit prompt + generation"
+    assert (args.shared_prefix_len + args.prompt_len_max + args.new_tokens
+            <= args.max_len), "--max-len must fit prompt + generation"
     requests = poisson_requests(
         num=args.requests,
         rate_hz=(args.rate if args.rate > 0 else np.inf),
         prompt_lens=(args.prompt_len_min, args.prompt_len_max),
         max_new_tokens=args.new_tokens,
         vocab_size=cfg.vocab_size, seed=args.seed)
+    if args.shared_prefix_len > 0:
+        # demo workload for prefix sharing: every prompt opens with the
+        # same system-prompt-style prefix, unique suffix after it
+        common = np.random.default_rng(args.seed + 1).integers(
+            0, cfg.vocab_size, (args.shared_prefix_len,), dtype=np.int32)
+        for r in requests:
+            r.prompt = np.concatenate([common, r.prompt])
 
     mesh = parse_mesh(args.mesh) if args.mesh else None
     engine = SlotEngine(run, capacity=args.capacity, max_len=args.max_len,
@@ -173,7 +207,8 @@ def main():
                         num_pages=args.num_pages or None,
                         mesh=mesh, sharding=SERVE_POLICY if mesh else None,
                         temperature=args.temperature, top_k=args.top_k,
-                        sample_seed=args.sample_seed)
+                        top_p=args.top_p, sample_seed=args.sample_seed,
+                        prefix_sharing=args.prefix_sharing)
     # the engine's jitted entries carry their own shardings; shard_ctx
     # around the stream simulator covers any ad-hoc constrain/device_put
     # in the serve path (identity when no mesh is installed)
@@ -188,8 +223,10 @@ def main():
     print(f"arch={cfg.name} capacity={args.capacity} "
           f"requests={args.requests} rate={args.rate or 'inf'}/s "
           f"gated={gated} paged={args.paged}"
+          + (" prefix_sharing" if args.prefix_sharing else "")
           + mesh_desc
-          + (f" temperature={args.temperature} top_k={args.top_k}"
+          + (f" temperature={args.temperature} top_k={args.top_k} "
+             f"top_p={args.top_p}"
              if args.temperature > 0 else ""))
     print(f"  traces: decode={engine.decode_traces} "
           f"prefill_buckets={engine.prefill_traces} "
@@ -201,6 +238,12 @@ def main():
     print(f"  concurrency: peak {int(report.stats['max_concurrency'])} "
           f"slots" + (f", peak pages {int(report.stats['peak_pages'])}"
                       f"/{engine.num_pages - 1}" if args.paged else ""))
+    if args.prefix_sharing:
+        print(f"  sharing: {int(report.stats['shared_admissions'])} shared "
+              f"admissions, {int(report.stats['shared_tokens'])} prompt "
+              f"tokens served from resident pages "
+              f"(prefill pushed {int(report.stats['prefill_tokens'])} "
+              f"bucketed tokens)")
     if report.rejected:
         print(f"  rejected: {len(report.rejected)} request(s) "
               f"(first: {report.rejected[0].reject_reason})")

@@ -217,6 +217,101 @@ def apply_attention_prefill(params, x, cfg, policy, cache: KVCache
     return xaif.call("gemm", policy, out, params["wo"]), new_cache
 
 
+class SharedPrefillCtx(NamedTuple):
+    """Traced context for a FORK-POINT prefill over a shared-prefix paged
+    cache (one per jitted shared-prefill trace; shapes are static — pow2
+    prefix cap and suffix-bucket region — values are data).
+
+    ``prefix_ids`` are the matched READ-ONLY full pages (-1 padded to the
+    trace's prefix cap), ``region_ids`` the slot's exclusive COW + suffix
+    pages (scratch-0 padded), ``start`` the absolute position of the first
+    suffix token, ``n_prefix`` the tokens resident in the shared full pages
+    (start - n_prefix = the in-page offset of the COW fork), ``true_len``
+    the full prompt length."""
+    prefix_ids: jax.Array   # [pcap] i32, -1 beyond the match
+    region_ids: jax.Array   # [n_region] i32, scratch-0 beyond the need
+    start: jax.Array        # [] i32
+    n_prefix: jax.Array     # [] i32
+    true_len: jax.Array     # [] i32
+
+
+def apply_attention_prefill_shared(params, x, cfg: ArchConfig,
+                                   policy: xaif.PolicyLike,
+                                   state: PagedKVCache,
+                                   ctx: SharedPrefillCtx
+                                   ) -> Tuple[jax.Array, PagedKVCache]:
+    """Suffix-only prefill against a shared paged prefix (x [1, Tsuf, d]).
+
+    The suffix K/V is spliced into the slot's exclusive region pages at the
+    fork offset (gather -> dynamic_update_slice -> scatter; the COW page's
+    first ``start - n_prefix`` rows carry the copied donor KV and are kept),
+    then the suffix queries attend [shared prefix pages ++ region] under an
+    explicit absolute-position mask. The math mirrors ``attention_ref``
+    (fp32, scale d^-0.5, -1e30 mask -> exact 0.0 after softmax), so greedy
+    tokens match the full-prompt prefill; shared pages are only GATHERED —
+    never written."""
+    b, tsuf, _ = x.shape
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ps = state.k_pages.shape[2]
+    qpos = ctx.start + jnp.arange(tsuf)                  # absolute positions
+    q, k, v = _project_qkv(params, x, cfg, policy, qpos[None])
+    # splice suffix K/V into the region at the fork offset
+    n_region = ctx.region_ids.shape[0]
+    rem = ctx.start - ctx.n_prefix
+
+    def flat(pages):      # [N, Hkv, ps, D] -> [Hkv, N*ps, D]
+        return pages.transpose(1, 0, 2, 3).reshape(hkv, -1, dh)
+
+    kreg = flat(state.k_pages[ctx.region_ids])
+    vreg = flat(state.v_pages[ctx.region_ids])
+    kreg = jax.lax.dynamic_update_slice(
+        kreg, k[0].astype(kreg.dtype), (0, rem, 0))
+    vreg = jax.lax.dynamic_update_slice(
+        vreg, v[0].astype(vreg.dtype), (0, rem, 0))
+
+    def unflat(a):        # [Hkv, N*ps, D] -> [N, Hkv, ps, D]
+        return a.reshape(hkv, n_region, ps, dh).transpose(1, 0, 2, 3)
+
+    new_state = PagedKVCache(
+        state.k_pages.at[ctx.region_ids].set(unflat(kreg)),
+        state.v_pages.at[ctx.region_ids].set(unflat(vreg)))
+    # keys/values: shared prefix pages (gather only) ++ spliced region
+    pids = jnp.where(ctx.prefix_ids >= 0, ctx.prefix_ids, 0)
+    kpre = flat(state.k_pages[pids])
+    vpre = flat(state.v_pages[pids])
+    n_pre = kpre.shape[1]
+    keys = jnp.concatenate([kpre, kreg], axis=1)         # [Hkv, S, D]
+    vals = jnp.concatenate([vpre, vreg], axis=1)
+    kpos = jnp.concatenate([jnp.arange(n_pre),
+                            ctx.n_prefix + jnp.arange(n_region * ps)])
+    valid = jnp.concatenate([jnp.arange(n_pre) < ctx.n_prefix,
+                             ctx.n_prefix + jnp.arange(n_region * ps)
+                             < ctx.true_len])
+    mask = valid[None, :] & (kpos[None, :] <= qpos[:, None])  # [Tsuf, S]
+    # attention_ref numerics: fp32 throughout, -1e30 masked lanes underflow
+    # to exactly 0.0 after the softmax max-subtraction
+    g = hq // hkv
+    qf = q[0].astype(jnp.float32) * (dh ** -0.5)         # [Hq, Tsuf, D]
+    kf = jnp.repeat(keys.astype(jnp.float32), g, axis=0)
+    vf = jnp.repeat(vals.astype(jnp.float32), g, axis=0)
+    logits = jnp.einsum("htd,hsd->hts", qf, kf)
+    logits = jnp.where(mask[None], logits, -1e30)
+    out = jnp.einsum("hts,hsd->htd", jax.nn.softmax(logits, axis=-1), vf)
+    out = out.astype(x.dtype).transpose(1, 0, 2).reshape(1, tsuf, hq * dh)
+    return xaif.call("gemm", policy, out, params["wo"]), new_state
+
+
+def copy_page(state, src, dst, stacked: bool = False):
+    """Copy-on-write device copy: pool page ``src`` -> ``dst`` in every
+    layer of a paged KV/MLA cache (``stacked`` marks [n_sb, P, ...] slot
+    states); other states pass through untouched."""
+    if isinstance(state, (PagedKVCache, PagedMLACache)):
+        if stacked:
+            return type(state)(*(a.at[:, dst].set(a[:, src]) for a in state))
+        return type(state)(*(a.at[dst].set(a[src]) for a in state))
+    return state
+
+
 def apply_attention_decode(params, x, cfg: ArchConfig, policy: xaif.PolicyLike,
                            cache: KVCache, cache_pos: jax.Array
                            ) -> Tuple[jax.Array, KVCache]:

@@ -98,6 +98,11 @@ def _apply_layer(p, x, spec: BlockSpec, cfg: ArchConfig, policy: xaif.PolicyLike
             elif mode == "prefill":
                 out, new_state = attn.apply_attention_prefill(
                     p["mixer"], h, cfg, policy, state)
+            elif mode == "prefill_shared":
+                # fork-point suffix prefill against shared paged prefix KV;
+                # ``page_table`` carries the SharedPrefillCtx here
+                out, new_state = attn.apply_attention_prefill_shared(
+                    p["mixer"], h, cfg, policy, state, page_table)
             else:
                 out = attn.apply_attention(p["mixer"], h, cfg, policy)
     elif spec.mixer == "mamba":
@@ -555,6 +560,50 @@ def forward_prefill(params, inputs, cfg: ArchConfig, policy: xaif.PolicyLike,
         pos = lengths.astype(jnp.int32)
     logits = _head(params, last, cfg, policy)
     return logits[:, 0], LMCache(tuple(new_prefix), tuple(new_slots), pos)
+
+
+def copy_pages(cache: PagedLMCache, src, dst) -> PagedLMCache:
+    """Copy-on-write: duplicate pool page ``src`` into ``dst`` across every
+    attention layer (prefix + stacked slots). The boundary page of a
+    partial prefix match is copied here so the divergent suffix prefill
+    never writes a page another slot still maps."""
+    new_prefix = tuple(attn.copy_page(c, src, dst) for c in cache.prefix)
+    new_slots = tuple(attn.copy_page(c, src, dst, stacked=True)
+                      for c in cache.slots)
+    return cache._replace(prefix=new_prefix, slots=new_slots)
+
+
+def forward_prefill_shared(params, inputs, cfg: ArchConfig,
+                           policy: xaif.PolicyLike, cache: PagedLMCache,
+                           slot, ctx: attn.SharedPrefillCtx, row_ids):
+    """Fork-point prefill: run ONLY the unshared suffix of a prompt whose
+    prefix KV is already resident in the page pools.
+
+    ``inputs`` [1, Tsuf_bucket] holds the right-padded suffix tokens;
+    ``ctx`` the shared/region page ids and absolute positions; ``row_ids``
+    [max_pages] the slot's complete new page-table row (prefix ++ region,
+    -1 beyond). Requires an all-attention, non-MLA arch (recurrent mixer
+    states cannot resume from a page chain). Returns (first-token logits
+    [1, V], cache with the slot admitted at length ``ctx.true_len``)."""
+    x = _embed(params, inputs, cfg)
+    new_prefix = []
+    for i in range(cfg.first_k_dense):
+        x, _, ns = _apply_layer(params["prefix"][i], x, cfg.layer_spec(i),
+                                cfg, policy, state=cache.prefix[i],
+                                mode="prefill_shared", page_table=ctx)
+        new_prefix.append(ns)
+    x, _, new_slots = _scan_segment(params["slots"], x, 0,
+                                    cfg.num_superblocks, cfg, policy,
+                                    mode="prefill_shared", states=cache.slots,
+                                    page_table=ctx)
+    tsuf_true = ctx.true_len - ctx.start
+    last = jnp.take_along_axis(
+        x, jnp.reshape(tsuf_true - 1, (1, 1, 1)).astype(jnp.int32), axis=1)
+    logits = _head(params, last, cfg, policy)
+    return logits[:, 0], PagedLMCache(
+        tuple(new_prefix), new_slots,
+        cache.pos.at[slot].set(ctx.true_len.astype(jnp.int32)),
+        cache.page_table.at[slot].set(jnp.asarray(row_ids, jnp.int32)))
 
 
 def forward_decode(params, tokens, cfg: ArchConfig, policy: xaif.PolicyLike,

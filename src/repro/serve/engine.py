@@ -59,11 +59,13 @@ from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import RunConfig, ShardingPolicy
 from repro.core.early_exit import gated_layer_fraction, merge_exit_logits
 from repro.dist import sharding as shd
+from repro.models import attention as attn
 from repro.models import lm
 
 # ---------------------------------------------------------------------------
@@ -197,12 +199,15 @@ def init_decode_state(capacity: int, seed: int = 0) -> DecodeState:
         exit_cnt=z, gated_layers=z, live_cnt=z)
 
 
-def make_sampler(temperature: float, top_k: int = 0) -> Optional[Callable]:
+def make_sampler(temperature: float, top_k: int = 0,
+                 top_p: float = 1.0) -> Optional[Callable]:
     """sample(key u32[2], logits [V]) -> i32 token, or None for greedy.
 
-    Temperature-scaled (optionally top-k-truncated) categorical sampling —
-    the ROADMAP "non-greedy sampling" first step. Greedy (temperature 0)
-    returns None so callers keep the exact argmax graph.
+    Temperature-scaled categorical sampling with optional top-k truncation
+    and top-p (nucleus) truncation — applied in that order: temperature,
+    top-k, then keep the smallest probability mass >= ``top_p`` (the top-1
+    token always survives, so top_p -> 0 degenerates to argmax). Greedy
+    (temperature 0) returns None so callers keep the exact argmax graph.
     """
     if temperature <= 0.0:
         return None
@@ -212,23 +217,41 @@ def make_sampler(temperature: float, top_k: int = 0) -> Optional[Callable]:
         if top_k > 0:
             kth = jax.lax.top_k(lg, top_k)[0][-1]
             lg = jnp.where(lg < kth, -jnp.inf, lg)
+        if 0.0 < top_p < 1.0:
+            order = jnp.argsort(-lg)                   # descending
+            sorted_lg = lg[order]
+            probs = jax.nn.softmax(sorted_lg)
+            # keep tokens whose PRECEDING cumulative mass is < top_p —
+            # the minimal nucleus covering top_p (top-1 always kept)
+            keep = (jnp.cumsum(probs) - probs) < top_p
+            sorted_lg = jnp.where(keep, sorted_lg, -jnp.inf)
+            choice = jax.random.categorical(key, sorted_lg)
+            return order[choice].astype(jnp.int32)
         return jax.random.categorical(key, lg).astype(jnp.int32)
 
     return sample
 
 
 def _admit_slot(st: DecodeState, logits0, slot, max_new,
-                sampler: Optional[Callable]) -> Tuple[DecodeState, jax.Array]:
+                sampler: Optional[Callable], rng0=None, has_seed=None
+                ) -> Tuple[DecodeState, jax.Array]:
     """Shared admission tail: first token (greedy or sampled with the
-    slot's key) + slot-state bookkeeping. Greedy leaves ``rng`` untouched,
-    so the greedy trace is leaf-identical to the pre-sampling engine."""
+    slot's key) + slot-state bookkeeping. Greedy leaves ``rng`` untouched
+    (``rng0``/``has_seed`` are dead arguments), so the greedy trace is
+    leaf-identical to the pre-sampling engine. When a per-request seed is
+    given (``has_seed``), the slot's key is REPLACED by the request's own
+    key — identical seeded requests replay the same sample stream no
+    matter which slot they land in."""
     if sampler is None:
         tok0 = jnp.argmax(logits0, axis=-1).astype(jnp.int32)
         rng = st.rng
     else:
-        key = jax.random.fold_in(st.rng[slot], 0)
+        base = st.rng[slot]
+        if rng0 is not None:
+            base = jnp.where(has_seed, rng0, base)
+        key = jax.random.fold_in(base, 0)
         tok0 = sampler(key, logits0)
-        rng = st.rng.at[slot].set(jax.random.fold_in(st.rng[slot], 1))
+        rng = st.rng.at[slot].set(jax.random.fold_in(base, 1))
     st = st._replace(
         tokens=st.tokens.at[slot].set(tok0),
         done=st.done.at[slot].set(max_new <= 1),
@@ -248,13 +271,14 @@ def make_prefill_slot(run: RunConfig, bucket_len: int,
     cfg, policy = run.arch, run.accel
 
     def prefill_slot(params, cache: lm.LMCache, st: DecodeState,
-                     tokens, true_len, slot, max_new):
+                     tokens, true_len, slot, max_new, rng0, has_seed):
         slot_cache = lm.init_cache(cfg, 1, bucket_len)
         logits, slot_cache = lm.forward_prefill(
             params, tokens, cfg, policy, slot_cache,
             lengths=true_len[None])
         cache = lm.fill_slot(cache, slot_cache, slot, true_len)
-        st, tok0 = _admit_slot(st, logits[0], slot, max_new, sampler)
+        st, tok0 = _admit_slot(st, logits[0], slot, max_new, sampler,
+                               rng0, has_seed)
         return cache, st, tok0
 
     return prefill_slot
@@ -272,14 +296,42 @@ def make_prefill_slot_paged(run: RunConfig, bucket_len: int,
     cfg, policy = run.arch, run.accel
 
     def prefill_slot(params, cache, st: DecodeState, tokens, true_len, slot,
-                     max_new, page_ids):
+                     max_new, page_ids, rng0, has_seed):
         slot_cache = lm.init_cache(cfg, 1, bucket_len)
         logits, slot_cache = lm.forward_prefill(
             params, tokens, cfg, policy, slot_cache,
             lengths=true_len[None])
         cache = lm.fill_slot_paged(cache, slot_cache, slot, true_len,
                                    page_ids)
-        st, tok0 = _admit_slot(st, logits[0], slot, max_new, sampler)
+        st, tok0 = _admit_slot(st, logits[0], slot, max_new, sampler,
+                               rng0, has_seed)
+        return cache, st, tok0
+
+    return prefill_slot
+
+
+def make_prefill_slot_shared(run: RunConfig, suffix_bucket: int,
+                             prefix_cap: int, page_size: int,
+                             sampler: Optional[Callable] = None):
+    """Fork-point admission: prefill ONLY the unshared suffix of a prompt
+    whose prefix KV is already resident in the page pools.
+
+    One trace per (suffix bucket, pow2 prefix cap) pair — the matched
+    length, fork offset and page ids are all traced DATA. ``tokens`` holds
+    the right-padded suffix; the shared prefix is attended in place via
+    ``lm.forward_prefill_shared`` (gather-only — a reader never writes a
+    shared page)."""
+    cfg, policy = run.arch, run.accel
+
+    def prefill_slot(params, cache, st: DecodeState, tokens, start, n_prefix,
+                     true_len, slot, max_new, prefix_ids, region_ids,
+                     row_ids, rng0, has_seed):
+        ctx = attn.SharedPrefillCtx(prefix_ids, region_ids, start, n_prefix,
+                                    true_len)
+        logits, cache = lm.forward_prefill_shared(
+            params, tokens, cfg, policy, cache, slot, ctx, row_ids)
+        st, tok0 = _admit_slot(st, logits[0], slot, max_new, sampler,
+                               rng0, has_seed)
         return cache, st, tok0
 
     return prefill_slot
@@ -405,7 +457,8 @@ class SlotEngine:
                  mesh: Optional[Mesh] = None,
                  sharding: Optional[ShardingPolicy] = None,
                  temperature: float = 0.0, top_k: int = 0,
-                 sample_seed: int = 0):
+                 top_p: float = 1.0, sample_seed: int = 0,
+                 prefix_sharing: bool = False):
         cfg = run.arch
         if gated:
             assert (cfg.early_exit is not None
@@ -414,6 +467,14 @@ class SlotEngine:
                 "gated decode needs an attention-only single-exit arch"
         assert not (gated and paged), \
             "gated decode is not page-aware yet (ROADMAP follow-up)"
+        if prefix_sharing:
+            assert paged, "prefix sharing requires the paged engine"
+            assert (all(b.mixer == "attn" for b in cfg.block_pattern)
+                    and cfg.mla is None and cfg.moe is None), \
+                ("prefix sharing needs an all-attention GQA arch: recurrent "
+                 "mixer states cannot resume from a page chain, MLA latents "
+                 "are not yet share-indexed, and capacity-grouped MoE "
+                 "prefill is suffix-length dependent")
         self.run = run
         self.capacity = capacity
         self.max_len = max_len
@@ -431,8 +492,10 @@ class SlotEngine:
         self.sharding = sharding if sharding is not None else run.sharding
         self.temperature = temperature
         self.top_k = top_k
+        self.top_p = top_p
         self.sample_seed = sample_seed
-        self._sampler = make_sampler(temperature, top_k)
+        self.prefix_sharing = prefix_sharing
+        self._sampler = make_sampler(temperature, top_k, top_p)
         # prefix layers inherit their mixer from the pattern, so all-attn
         # patterns are pad-safe end to end; recurrent mixers are not, and
         # neither is capacity-bounded MoE PREFILL — pad tokens would route
@@ -446,6 +509,10 @@ class SlotEngine:
         self.decode_traces = 0
         self.prefill_traces = 0
         self.decode_calls = 0
+        # bucketed tokens pushed through prefill (shared admissions count
+        # only their suffix) — proportional to prefill FLOPs, the quantity
+        # the prefix-sharing benchmark reports savings on
+        self.prefill_tokens = 0
 
         # resolved once: (params_sh, cache_sh, state_sh) or None (no mesh)
         self._shardings = self._resolve_shardings()
@@ -466,6 +533,8 @@ class SlotEngine:
         self._decode = jax.jit(self._traced(counted_decode),
                                donate_argnums=(1, 2), **jit_kw)
         self._prefill = {}                   # bucket_len -> jitted fn
+        self._prefill_shared = {}            # (suffix_bucket, pcap) -> fn
+        self._copy_page = None               # lazily jitted COW copy
 
     # -- mesh plumbing -----------------------------------------------------
 
@@ -534,11 +603,23 @@ class SlotEngine:
         b = self.prompt_bucket
         return min(-(-t // b) * b, self.max_len)
 
+    @staticmethod
+    def _seed_args(seed: Optional[int]):
+        """(rng0 u32[2], has_seed bool) traced pair for a per-request
+        sample seed — both are DATA, so seeded and unseeded admissions
+        share one trace (and greedy traces treat them as dead args)."""
+        rng0 = (jax.random.PRNGKey(seed) if seed is not None
+                else jnp.zeros((2,), jnp.uint32))
+        return (jnp.asarray(rng0, jnp.uint32),
+                jnp.asarray(seed is not None))
+
     def prefill_into(self, params, cache, st, prompt, slot: int,
-                     max_new: int, page_ids=None):
+                     max_new: int, page_ids=None, seed: Optional[int] = None):
         """Admit one request: bucketed batch-1 prefill into ``slot``.
         prompt: 1-D int32 array/list. Paged engines additionally take the
         host-allocated ``page_ids`` (one per bucket page, position order).
+        ``seed``: optional per-request sample seed (replayable sampling
+        independent of slot placement; ignored by greedy engines).
         Returns (cache, st, first_token)."""
         prompt = jnp.asarray(prompt, jnp.int32)
         t = int(prompt.shape[0])
@@ -561,6 +642,7 @@ class SlotEngine:
                          rep, rep, rep)
                 if self.paged:
                     in_sh = in_sh + (NamedSharding(self.mesh, P(None)),)
+                in_sh = in_sh + (NamedSharding(self.mesh, P(None)), rep)
                 kw = dict(in_shardings=in_sh,
                           out_shardings=(cache_sh, state_sh, rep))
             self._prefill[bucket] = jax.jit(self._traced(make),
@@ -572,7 +654,84 @@ class SlotEngine:
             n_bucket = -(-bucket // self.page_size)
             assert page_ids.shape == (n_bucket,), (page_ids.shape, n_bucket)
             args = args + (jnp.asarray(page_ids, jnp.int32),)
-        return self._prefill[bucket](*args)
+        self.prefill_tokens += bucket
+        return self._prefill[bucket](*args + self._seed_args(seed))
+
+    # -- prefix-sharing admission ------------------------------------------
+
+    def copy_page(self, cache, src: int, dst: int):
+        """Copy-on-write: duplicate pool page ``src`` into the slot's
+        exclusive page ``dst`` across every attention layer (one jitted
+        donated call; traced page ids, so every COW reuses the trace)."""
+        assert self.paged
+        if self._copy_page is None:
+            kw = {}
+            if self._shardings is not None:
+                _, cache_sh, _ = self._shardings
+                rep = NamedSharding(self.mesh, P())
+                kw = dict(in_shardings=(cache_sh, rep, rep),
+                          out_shardings=cache_sh)
+            self._copy_page = jax.jit(self._traced(lm.copy_pages),
+                                      donate_argnums=(0,), **kw)
+        return self._copy_page(cache, jnp.asarray(src, jnp.int32),
+                               jnp.asarray(dst, jnp.int32))
+
+    def prefill_into_shared(self, params, cache, st, prompt, start: int,
+                            slot: int, max_new: int, prefix_ids, region_ids,
+                            row, seed: Optional[int] = None):
+        """Admit one request at its FORK POINT: only ``prompt[start:]`` is
+        prefilled; positions [0, start) are already resident in the shared
+        ``prefix_ids`` pages (plus the first ``start mod page_size`` rows
+        of the COW page ``region_ids[0]``). ``row`` is the slot's complete
+        host mirror page-table row. One trace per (suffix bucket, pow2
+        prefix cap). Returns (cache, st, first_token)."""
+        assert self.prefix_sharing
+        prompt = jnp.asarray(prompt, jnp.int32)
+        t = int(prompt.shape[0])
+        assert 0 < start < t and t + max_new <= self.max_len
+        tsuf = t - start
+        suffix_bucket = self._bucket(tsuf)
+        n_full = int(np.asarray(prefix_ids).shape[0])
+        n_prefix = n_full * self.page_size
+        assert n_prefix <= start < n_prefix + self.page_size
+        pcap = 1 << max(0, n_full - 1).bit_length() if n_full > 1 else 1
+        n_region_cap = -(-suffix_bucket // self.page_size) + 1
+        key = (suffix_bucket, pcap)
+        if key not in self._prefill_shared:
+            self.prefill_traces += 1
+            make = make_prefill_slot_shared(self.run, suffix_bucket, pcap,
+                                            self.page_size, self._sampler)
+            kw = {}
+            if self._shardings is not None:
+                params_sh, cache_sh, state_sh = self._shardings
+                rep = NamedSharding(self.mesh, P())
+                tok_sh = NamedSharding(self.mesh, P(None, None))
+                vec = NamedSharding(self.mesh, P(None))
+                in_sh = (params_sh, cache_sh, state_sh, tok_sh,
+                         rep, rep, rep, rep, rep, vec, vec, vec,
+                         vec, rep)
+                kw = dict(in_shardings=in_sh,
+                          out_shardings=(cache_sh, state_sh, rep))
+            self._prefill_shared[key] = jax.jit(self._traced(make),
+                                                donate_argnums=(1, 2), **kw)
+        pids = np.full((pcap,), -1, np.int32)
+        pids[:n_full] = np.asarray(prefix_ids, np.int32)
+        rids = np.zeros((n_region_cap,), np.int32)      # pad -> scratch 0
+        n_region = int(np.asarray(region_ids).shape[0])
+        assert n_region <= n_region_cap
+        rids[:n_region] = np.asarray(region_ids, np.int32)
+        padded = jnp.zeros((1, suffix_bucket),
+                           jnp.int32).at[0, :tsuf].set(prompt[start:])
+        args = (params, cache, st, padded,
+                jnp.asarray(start, jnp.int32),
+                jnp.asarray(n_prefix, jnp.int32),
+                jnp.asarray(t, jnp.int32),
+                jnp.asarray(slot, jnp.int32),
+                jnp.asarray(max_new, jnp.int32),
+                jnp.asarray(pids), jnp.asarray(rids),
+                jnp.asarray(row, jnp.int32))
+        self.prefill_tokens += suffix_bucket
+        return self._prefill_shared[key](*args + self._seed_args(seed))
 
     # -- paged page-table sync ---------------------------------------------
 

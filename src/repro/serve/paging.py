@@ -6,28 +6,173 @@ scheduler consults it for admission (by FREE PAGES, not free slots), grows
 slots on demand before each decode chunk, and releases pages at retire —
 all pure host bookkeeping, so page churn never re-traces the decode graph.
 
-Invariants (asserted where cheap, tested in tests/test_paged.py):
+Prefix sharing (``sharing=True``) adds a :class:`PrefixIndex` — a radix
+tree over resident token-id page chains — and per-page REFERENCE COUNTS:
+
+* a page's refcount is (#slot page-table rows mapping it) + (1 if the
+  index registers it); a page returns to the free list only at refcount 0;
+* shared pages are READ-ONLY by construction: full pages are immutable
+  once written (decode appends only ever touch a slot's own tail page,
+  which is never index-registered while the slot lives), and a matched
+  partial boundary page is COPIED at admission (copy-on-write) so the
+  divergent suffix never mutates a page another reader maps;
+* the index is a CACHE: pages held only by the index (refcount 1) are
+  RECLAIMABLE — counted as available for admission and evicted leaf-first
+  in LRU order when the free list runs dry. An index-held interior node
+  whose descendant is slot-mapped is itself slot-mapped (the slot matched
+  through it), so leaf-first eviction can always reach every reclaimable
+  page.
+
+Invariants (asserted where cheap, tested in tests/test_paged.py and
+tests/test_prefix_sharing.py):
 
 * page 0 is the reserved SCRATCH page: never allocated, never validly read
   (dead-slot appends land there);
-* live slots own DISJOINT page sets; the mirror row ``table[slot, :n]``
-  lists slot ``slot``'s pages in position order, -1 beyond;
+* live slots WRITE disjoint page sets; the mirror row ``table[slot, :n]``
+  lists slot ``slot``'s pages in position order, -1 beyond (shared prefix
+  pages may appear in several rows — all readers);
 * admission reserves each request's WORST-CASE page count
-  (max(bucket pages, ceil((prompt + max_new) / ps))), so on-demand growth
-  during decode can never fail — no preemption/eviction path is needed.
-  Optimistic admission with preemption is a ROADMAP follow-up.
+  (max(pages mapped at admit, ceil((prompt + max_new) / ps))), so
+  on-demand growth during decode can never fail — no preemption path is
+  needed. With sharing disabled every refcount is exactly 1 and behavior
+  reduces to the PR 3 allocator.
 """
 from __future__ import annotations
 
 from collections import deque
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 
+class _TrieNode:
+    """One FULL page of a resident token chain: ``edge`` is the page's
+    ``page_size`` token ids, ``page`` the pool page holding their KV."""
+    __slots__ = ("edge", "page", "children", "parent", "stamp")
+
+    def __init__(self, edge: Optional[Tuple[int, ...]], page: int,
+                 parent: Optional["_TrieNode"], stamp: int):
+        self.edge = edge
+        self.page = page
+        self.children: Dict[Tuple[int, ...], "_TrieNode"] = {}
+        self.parent = parent
+        self.stamp = stamp
+
+
+class PrefixIndex:
+    """Radix tree over resident token-id page chains, page-granular edges.
+
+    ``match`` walks full-page edges and then token-granularly into ONE
+    boundary page (the longest common prefix with a child edge) — the
+    copy-on-write source. ``insert`` registers a retired/admitted chain's
+    full pages; existing nodes keep their page (dedup — the first resident
+    copy wins). Eviction is leaf-first in LRU ``stamp`` order and only ever
+    frees pages no slot maps (refcount 1, index-only).
+    """
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        self.root = _TrieNode(None, -1, None, 0)
+        self._clock = 0
+        self.pages: Dict[int, _TrieNode] = {}   # pid -> owning node
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def __len__(self) -> int:
+        return len(self.pages)
+
+    # -- lookup --------------------------------------------------------------
+
+    def match(self, tokens: np.ndarray, cap: int
+              ) -> Tuple[List[int], Optional[int], int]:
+        """Longest indexed prefix of ``tokens[:cap]``.
+
+        Returns ``(full_pages, boundary_page, rem)``: the page chain for
+        ``len(full_pages) * ps`` fully matched tokens, plus (optionally)
+        a boundary page whose first ``rem`` (< ps) tokens also match — the
+        COW source. Touches every matched node's LRU stamp.
+        """
+        ps = self.page_size
+        toks = [int(x) for x in tokens]
+        node, i, pages = self.root, 0, []
+        stamp = self._tick()
+        while i + ps <= cap:
+            child = node.children.get(tuple(toks[i:i + ps]))
+            if child is None:
+                break
+            child.stamp = stamp
+            pages.append(child.page)
+            node, i = child, i + ps
+        # token-granular tail: longest common prefix with ONE child edge
+        boundary, rem = None, 0
+        limit = min(ps, cap - i)
+        if limit > 0:
+            tail = toks[i:i + limit]
+            for edge, child in node.children.items():
+                lcp = 0
+                while lcp < limit and edge[lcp] == tail[lcp]:
+                    lcp += 1
+                if lcp > rem or (lcp == rem and boundary is not None
+                                 and child.page < boundary):
+                    if lcp > 0:
+                        boundary, rem = child.page, lcp
+            if boundary is not None:
+                self.pages[boundary].stamp = stamp
+        return pages, boundary, rem
+
+    # -- registration ---------------------------------------------------------
+
+    def insert(self, tokens: np.ndarray, row_pages: Sequence[int],
+               alloc: "PageAllocator") -> int:
+        """Register the full pages of ``tokens`` along ``row_pages``
+        (position order). New nodes retain their page; nodes already
+        present keep the existing resident copy. Returns #new nodes."""
+        ps = self.page_size
+        toks = [int(x) for x in tokens]
+        n_full = min(len(toks) // ps, len(row_pages))
+        node, added = self.root, 0
+        stamp = self._tick()
+        for j in range(n_full):
+            edge = tuple(toks[j * ps:(j + 1) * ps])
+            child = node.children.get(edge)
+            if child is None:
+                pid = int(row_pages[j])
+                child = _TrieNode(edge, pid, node, stamp)
+                node.children[edge] = child
+                self.pages[pid] = child
+                alloc._retain(pid)
+                added += 1
+            else:
+                child.stamp = stamp
+            node = child
+        return added
+
+    # -- eviction -------------------------------------------------------------
+
+    def evict_one(self, alloc: "PageAllocator") -> Optional[int]:
+        """Drop the LRU reclaimable LEAF (refcount 1 — held only by the
+        index) and release its page. Returns the page id freed, or None
+        if nothing is reclaimable."""
+        victim = None
+        for pid, node in self.pages.items():
+            if node.children or alloc.refcnt.get(pid, 0) != 1:
+                continue
+            if victim is None or node.stamp < victim.stamp or (
+                    node.stamp == victim.stamp and pid < victim.page):
+                victim = node
+        if victim is None:
+            return None
+        del victim.parent.children[victim.edge]
+        del self.pages[victim.page]
+        alloc._release_page(victim.page)
+        return victim.page
+
+
 class PageAllocator:
     def __init__(self, num_pages: int, capacity: int, max_pages: int,
-                 page_size: int):
+                 page_size: int, sharing: bool = False):
         assert num_pages >= 2, "need at least one non-scratch page"
         self.num_pages = num_pages
         self.page_size = page_size
@@ -35,9 +180,38 @@ class PageAllocator:
         self.free: deque = deque(range(1, num_pages))   # page 0 = scratch
         self.owned: Dict[int, List[int]] = {}           # slot -> page ids
         self.reserved: Dict[int, int] = {}              # slot -> worst case
+        self.refcnt: Dict[int, int] = {}                # pid -> holders
         self.table = np.full((capacity, max_pages), -1, np.int32)
         self.dirty = False                              # mirror vs device
         self.peak_pages = 0                             # high-water mark
+        self.index = PrefixIndex(page_size) if sharing else None
+
+    # -- refcounts -----------------------------------------------------------
+
+    def _retain(self, pid: int) -> None:
+        self.refcnt[pid] = self.refcnt.get(pid, 0) + 1
+
+    def _release_page(self, pid: int) -> None:
+        rc = self.refcnt[pid] - 1
+        if rc == 0:
+            del self.refcnt[pid]
+            self.free.append(pid)
+        else:
+            self.refcnt[pid] = rc
+
+    def _pop_free(self) -> int:
+        """Pop a free page, evicting LRU index-only pages if the free list
+        ran dry — covered by ``available``'s reclaimable term, so a pop
+        guarded by ``can_admit``/``reserved`` can never fail."""
+        while not self.free:
+            freed = (self.index.evict_one(self)
+                     if self.index is not None else None)
+            if freed is None:
+                raise AssertionError(
+                    "allocator exhausted despite reservation accounting")
+        pid = self.free.popleft()
+        self._retain(pid)
+        return pid
 
     # -- accounting ----------------------------------------------------------
 
@@ -46,14 +220,25 @@ class PageAllocator:
 
     @property
     def pages_in_use(self) -> int:
-        return sum(len(v) for v in self.owned.values())
+        """DISTINCT pages mapped by live slots (shared pages count once —
+        identical to the per-slot sum when nothing is shared)."""
+        return len({p for pages in self.owned.values() for p in pages})
+
+    @property
+    def reclaimable(self) -> int:
+        """Index-held pages no slot maps — evictable on demand."""
+        if self.index is None:
+            return 0
+        return sum(1 for pid in self.index.pages
+                   if self.refcnt.get(pid, 0) == 1)
 
     @property
     def available(self) -> int:
-        """Pages free AND not spoken for by an existing reservation."""
+        """Pages free (or reclaimable from the index cache) AND not spoken
+        for by an existing reservation."""
         outstanding = sum(self.reserved[s] - len(self.owned[s])
                           for s in self.reserved)
-        return len(self.free) - outstanding
+        return len(self.free) + self.reclaimable - outstanding
 
     def _reservation(self, bucket_len: int, true_len: int,
                      max_new: int) -> int:
@@ -77,7 +262,7 @@ class PageAllocator:
         need = self._reservation(bucket_len, true_len, max_new)
         assert need <= self.available, "admission must check can_admit first"
         n_bucket = self.pages_for(bucket_len)
-        ids = [self.free.popleft() for _ in range(n_bucket)]
+        ids = [self._pop_free() for _ in range(n_bucket)]
         self.owned[slot] = ids
         self.reserved[slot] = need
         self.table[slot, :] = -1
@@ -93,15 +278,72 @@ class PageAllocator:
         assert need <= self.reserved[slot], (slot, last_pos, self.reserved)
         pages = self.owned[slot]
         while len(pages) < need:
-            pid = self.free.popleft()       # cannot fail: reserved
+            pid = self._pop_free()          # cannot fail: reserved
             self.table[slot, len(pages)] = pid
             pages.append(pid)
             self.dirty = True
         self.peak_pages = max(self.peak_pages, self.pages_in_use)
 
     def release(self, slot: int) -> None:
-        """Retire ``slot``: every owned page returns to the free list."""
-        self.free.extend(self.owned.pop(slot))
+        """Retire ``slot``: drop one reference per owned page; pages reach
+        the free list only at refcount 0 (index-registered or still-shared
+        pages survive — that is the whole point of sharing)."""
+        for pid in self.owned.pop(slot):
+            self._release_page(pid)
         del self.reserved[slot]
         self.table[slot, :] = -1
         self.dirty = True
+
+    # -- prefix sharing --------------------------------------------------------
+
+    def match(self, prompt: np.ndarray
+              ) -> Tuple[List[int], Optional[int], int]:
+        """Longest indexed prefix of ``prompt``, capped at len - 1 so the
+        unshared suffix always holds >= 1 token (prefill must produce the
+        first-token logits)."""
+        assert self.index is not None
+        return self.index.match(prompt, cap=len(prompt) - 1)
+
+    def can_admit_shared(self, n_shared: int, rem: int, suffix_bucket: int,
+                         true_len: int, max_new: int) -> bool:
+        """Admission check for a request sharing ``n_shared`` full pages:
+        only the COW/suffix region and future growth come from the pool."""
+        n_region = self.pages_for(rem + suffix_bucket)
+        need = max(n_region,
+                   self.pages_for(true_len + max_new) - n_shared)
+        return need <= self.available
+
+    def admit_shared(self, slot: int, prefix_pages: Sequence[int], rem: int,
+                     suffix_bucket: int, true_len: int, max_new: int
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Admit at the fork point: map the matched ``prefix_pages`` into
+        the slot's row (retained FIRST, so eviction during the region pops
+        can never free them) and allocate the COW/suffix region behind
+        them. Returns (prefix ids, region ids) for the jitted shared fill;
+        region page 0 is the COW destination when ``rem > 0``."""
+        assert self.index is not None and slot not in self.owned
+        n_shared = len(prefix_pages)
+        assert self.can_admit_shared(n_shared, rem, suffix_bucket,
+                                     true_len, max_new)
+        for pid in prefix_pages:
+            self._retain(pid)
+        n_region = self.pages_for(rem + suffix_bucket)
+        region = [self._pop_free() for _ in range(n_region)]
+        ids = list(prefix_pages) + region
+        self.owned[slot] = ids
+        self.reserved[slot] = max(len(ids),
+                                  self.pages_for(true_len + max_new))
+        self.table[slot, :] = -1
+        self.table[slot, :len(ids)] = ids
+        self.dirty = True
+        self.peak_pages = max(self.peak_pages, self.pages_in_use)
+        return (np.asarray(prefix_pages, np.int32),
+                np.asarray(region, np.int32))
+
+    def register(self, chain: np.ndarray, slot: int) -> int:
+        """Index every FULL page of ``chain`` (token ids with KV resident
+        in ``slot``'s pages) — at admission (the prompt) and at retire
+        (prompt + generated tokens whose KV was written). Returns #pages
+        newly indexed."""
+        assert self.index is not None
+        return self.index.insert(chain, self.owned[slot], self)

@@ -40,6 +40,9 @@ class Request:
     prompt: np.ndarray                 # [t] int32
     max_new_tokens: int
     arrival: float = 0.0               # seconds from stream start
+    # optional per-request sample seed: identical seeded requests replay
+    # the same sample stream regardless of slot placement (greedy ignores)
+    seed: Optional[int] = None
 
     # lifecycle (filled by the scheduler)
     t_admitted: Optional[float] = None
@@ -104,8 +107,11 @@ class SlotScheduler:
         self.alloc: Optional[PageAllocator] = None
         if engine.paged:
             self.alloc = PageAllocator(engine.num_pages, engine.capacity,
-                                       engine.max_pages, engine.page_size)
+                                       engine.max_pages, engine.page_size,
+                                       sharing=engine.prefix_sharing)
         self.max_concurrency = 0                     # peak occupied slots
+        self.shared_tokens = 0                       # prompt tokens NOT prefilled
+        self.shared_admissions = 0                   # fork-point admissions
 
     # -- admission ---------------------------------------------------------
 
@@ -121,6 +127,10 @@ class SlotScheduler:
             return REJECTED
         if not self.free:
             return FULL
+        if self.alloc is not None and self.alloc.index is not None:
+            res = self._admit_shared(req, now, t)
+            if res is not None:
+                return res                           # ADMITTED or FULL
         bucket = self.engine._bucket(t)
         page_ids = None
         if self.alloc is not None:
@@ -132,13 +142,56 @@ class SlotScheduler:
             slot = self.free.popleft()
         self.cache, self.state, tok0 = self.engine.prefill_into(
             self.params, self.cache, self.state, req.prompt, slot,
-            req.max_new_tokens, page_ids=page_ids)
+            req.max_new_tokens, page_ids=page_ids, seed=req.seed)
         # (the jitted fill wrote this slot's device table row; any OTHER
         # pending mirror changes — e.g. rows cleared by release() — keep
         # alloc.dirty set and are pushed before the next decode chunk.
         # That push must land before a freed page is re-read: a retired
         # slot's stale device row would otherwise route its dead-slot
         # appends into a page that now belongs to someone else.)
+        if self.alloc is not None and self.alloc.index is not None:
+            # index the prompt's full pages (their KV lands before any
+            # matching reader's gather — device program order)
+            self.alloc.register(np.asarray(req.prompt), slot)
+        return self._finish_admit(req, slot, tok0, now, t)
+
+    def _admit_shared(self, req: Request, now: float, t: int):
+        """Fork-point admission against the prefix index. Returns ADMITTED,
+        FULL (matched but the COW/suffix region cannot be reserved — the
+        standard path would need strictly more pages, so don't bother), or
+        None (no indexed prefix: take the standard prefill path)."""
+        prompt = np.asarray(req.prompt)
+        pages, boundary, rem = self.alloc.match(prompt)
+        if not pages:
+            return None                              # min share: 1 full page
+        if boundary is None:
+            rem = 0
+        ps = self.engine.page_size
+        start = len(pages) * ps + rem
+        suffix_bucket = self.engine._bucket(t - start)
+        if not self.alloc.can_admit_shared(len(pages), rem, suffix_bucket,
+                                           t, req.max_new_tokens):
+            return FULL
+        slot = self.free.popleft()
+        prefix_ids, region_ids = self.alloc.admit_shared(
+            slot, pages, rem, suffix_bucket, t, req.max_new_tokens)
+        if rem > 0:
+            # copy-on-write: the boundary page is duplicated BEFORE the
+            # suffix prefill appends into it — the donor's page is never
+            # touched by this slot
+            self.cache = self.engine.copy_page(self.cache, int(boundary),
+                                               int(region_ids[0]))
+        self.cache, self.state, tok0 = self.engine.prefill_into_shared(
+            self.params, self.cache, self.state, prompt, start, slot,
+            req.max_new_tokens, prefix_ids, region_ids,
+            self.alloc.table[slot], seed=req.seed)
+        self.alloc.register(prompt, slot)
+        self.shared_tokens += start
+        self.shared_admissions += 1
+        return self._finish_admit(req, slot, tok0, now, t)
+
+    def _finish_admit(self, req: Request, slot: int, tok0, now: float,
+                      t: int) -> str:
         req.t_admitted = now
         req.tokens.append(int(tok0))                 # per-REQUEST fetch
         self.occupant[slot] = req
@@ -191,6 +244,15 @@ class SlotScheduler:
                 del self._gen_seen[slot]
                 del self._true_len[slot]
                 if self.alloc is not None:
+                    if self.alloc.index is not None:
+                        # index the retired chain so FUTURE requests can
+                        # share it. KV is resident through position
+                        # t + len(tokens) - 2 only (the final token was
+                        # never fed back), hence tokens[:-1].
+                        chain = np.concatenate([
+                            np.asarray(req.prompt, np.int64),
+                            np.asarray(req.tokens[:-1], np.int64)])
+                        self.alloc.register(chain, slot)
                     self.alloc.release(slot)         # pages -> free list
                 self.free.append(slot)               # backfill: host-only
         return produced
@@ -243,8 +305,13 @@ def serve(engine: SlotEngine, params, requests: List[Request],
     total = decode_tokens + sum(1 for r in requests if r.tokens)
     stats = SlotEngine.stats(sched.state)
     stats["max_concurrency"] = float(sched.max_concurrency)
+    stats["prefill_tokens"] = float(engine.prefill_tokens)   # cumulative
     if sched.alloc is not None:
         stats["peak_pages"] = float(sched.alloc.peak_pages)
+        if sched.alloc.index is not None:
+            stats["shared_tokens"] = float(sched.shared_tokens)
+            stats["shared_admissions"] = float(sched.shared_admissions)
+            stats["index_pages"] = float(len(sched.alloc.index))
     return ServeReport(requests=requests, wall_s=wall, decode_tokens=total,
                        stats=stats)
 
