@@ -17,11 +17,14 @@ tree over resident token-id page chains — and per-page REFERENCE COUNTS:
   partial boundary page is COPIED at admission (copy-on-write) so the
   divergent suffix never mutates a page another reader maps;
 * the index is a CACHE: pages held only by the index (refcount 1) are
-  RECLAIMABLE — counted as available for admission and evicted leaf-first
-  in LRU order when the free list runs dry. An index-held interior node
-  whose descendant is slot-mapped is itself slot-mapped (the slot matched
-  through it), so leaf-first eviction can always reach every reclaimable
-  page.
+  evicted leaf-first in LRU order when the free list runs dry. A page
+  counts as RECLAIMABLE (available for admission) only when its WHOLE
+  subtree is index-only: dedup registration can leave a refcount-1
+  interior node above a slot-mapped leaf (the slot maps its own duplicate
+  page, not the indexed one), and leaf-first eviction can never reach
+  such a node. Shared admission likewise excludes the matched pages it is
+  about to pin from the reclaimable count — retaining them makes them
+  unevictable, so they must not fund their own region allocation.
 
 Invariants (asserted where cheap, tested in tests/test_paged.py and
 tests/test_prefix_sharing.py):
@@ -151,6 +154,22 @@ class PrefixIndex:
 
     # -- eviction -------------------------------------------------------------
 
+    def reclaimable(self, refcnt: Dict[int, int]) -> int:
+        """Pages leaf-first eviction can actually reach: a node's page
+        counts only if it AND its whole subtree are index-only (refcount
+        1). Dedup can shadow a descendant with a slot's duplicate page —
+        the refcount-1 ancestors above a slot-mapped node are unevictable
+        no matter how many leaves go first."""
+        def walk(node):
+            count, subtree_ok = 0, True
+            for child in node.children.values():
+                c, ok = walk(child)
+                count += c
+                subtree_ok = subtree_ok and ok
+            ok = subtree_ok and refcnt.get(node.page, 0) == 1
+            return count + (1 if ok else 0), ok
+        return sum(walk(child)[0] for child in self.root.children.values())
+
     def evict_one(self, alloc: "PageAllocator") -> Optional[int]:
         """Drop the LRU reclaimable LEAF (refcount 1 — held only by the
         index) and release its page. Returns the page id freed, or None
@@ -226,11 +245,11 @@ class PageAllocator:
 
     @property
     def reclaimable(self) -> int:
-        """Index-held pages no slot maps — evictable on demand."""
+        """Index-held pages eviction can actually free on demand (whole
+        subtree index-only — see ``PrefixIndex.reclaimable``)."""
         if self.index is None:
             return 0
-        return sum(1 for pid in self.index.pages
-                   if self.refcnt.get(pid, 0) == 1)
+        return self.index.reclaimable(self.refcnt)
 
     @property
     def available(self) -> int:
@@ -304,31 +323,55 @@ class PageAllocator:
         assert self.index is not None
         return self.index.match(prompt, cap=len(prompt) - 1)
 
-    def can_admit_shared(self, n_shared: int, rem: int, suffix_bucket: int,
-                         true_len: int, max_new: int) -> bool:
-        """Admission check for a request sharing ``n_shared`` full pages:
-        only the COW/suffix region and future growth come from the pool."""
+    def _pinned(self, prefix_pages: Sequence[int],
+                boundary: Optional[int]) -> int:
+        """Matched pages currently counted reclaimable (refcount 1,
+        index-only) that shared admission will retain: pinning them makes
+        them unevictable, so availability checks must not spend them on
+        the region allocation they themselves enable."""
+        pids = {int(p) for p in prefix_pages}
+        if boundary is not None:
+            pids.add(int(boundary))
+        return sum(1 for pid in pids if self.refcnt.get(pid, 0) == 1)
+
+    def can_admit_shared(self, prefix_pages: Sequence[int],
+                         boundary: Optional[int], rem: int,
+                         suffix_bucket: int, true_len: int,
+                         max_new: int) -> bool:
+        """Admission check for a request sharing the matched
+        ``prefix_pages`` (plus COW source ``boundary``): only the
+        COW/suffix region and future growth come from the pool, and the
+        matched pages stop being reclaimable the moment admission retains
+        them — exclude them from the availability."""
+        n_shared = len(prefix_pages)
         n_region = self.pages_for(rem + suffix_bucket)
         need = max(n_region,
                    self.pages_for(true_len + max_new) - n_shared)
-        return need <= self.available
+        return need <= self.available - self._pinned(prefix_pages, boundary)
 
-    def admit_shared(self, slot: int, prefix_pages: Sequence[int], rem: int,
+    def admit_shared(self, slot: int, prefix_pages: Sequence[int],
+                     boundary: Optional[int], rem: int,
                      suffix_bucket: int, true_len: int, max_new: int
                      ) -> Tuple[np.ndarray, np.ndarray]:
         """Admit at the fork point: map the matched ``prefix_pages`` into
         the slot's row (retained FIRST, so eviction during the region pops
         can never free them) and allocate the COW/suffix region behind
-        them. Returns (prefix ids, region ids) for the jitted shared fill;
-        region page 0 is the COW destination when ``rem > 0``."""
+        them. The ``boundary`` COW source is pinned across the pops too:
+        the caller copies it into region page 0 immediately after (when
+        ``rem > 0``), and eviction must not recycle it first. Returns
+        (prefix ids, region ids) for the jitted shared fill."""
         assert self.index is not None and slot not in self.owned
-        n_shared = len(prefix_pages)
-        assert self.can_admit_shared(n_shared, rem, suffix_bucket,
-                                     true_len, max_new)
+        assert self.can_admit_shared(prefix_pages, boundary, rem,
+                                     suffix_bucket, true_len, max_new)
         for pid in prefix_pages:
             self._retain(pid)
+        if boundary is not None:
+            self._retain(boundary)
         n_region = self.pages_for(rem + suffix_bucket)
         region = [self._pop_free() for _ in range(n_region)]
+        if boundary is not None:
+            self._release_page(boundary)    # pops done: the COW copy is
+                                            # the caller's next operation
         ids = list(prefix_pages) + region
         self.owned[slot] = ids
         self.reserved[slot] = max(len(ids),

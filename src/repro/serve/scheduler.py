@@ -130,7 +130,7 @@ class SlotScheduler:
         if self.alloc is not None and self.alloc.index is not None:
             res = self._admit_shared(req, now, t)
             if res is not None:
-                return res                           # ADMITTED or FULL
+                return res                           # ADMITTED
         bucket = self.engine._bucket(t)
         page_ids = None
         if self.alloc is not None:
@@ -156,10 +156,12 @@ class SlotScheduler:
         return self._finish_admit(req, slot, tok0, now, t)
 
     def _admit_shared(self, req: Request, now: float, t: int):
-        """Fork-point admission against the prefix index. Returns ADMITTED,
-        FULL (matched but the COW/suffix region cannot be reserved — the
-        standard path would need strictly more pages, so don't bother), or
-        None (no indexed prefix: take the standard prefill path)."""
+        """Fork-point admission against the prefix index. Returns ADMITTED
+        or None — either no indexed prefix, or the COW/suffix region cannot
+        be reserved right now. Bucket rounding can make the shared
+        reservation LARGER than the standard one (rem + bucket(t - start)
+        may exceed bucket(t)), so a failed check falls through to the
+        standard prefill path rather than reporting FULL."""
         prompt = np.asarray(req.prompt)
         pages, boundary, rem = self.alloc.match(prompt)
         if not pages:
@@ -169,12 +171,14 @@ class SlotScheduler:
         ps = self.engine.page_size
         start = len(pages) * ps + rem
         suffix_bucket = self.engine._bucket(t - start)
-        if not self.alloc.can_admit_shared(len(pages), rem, suffix_bucket,
-                                           t, req.max_new_tokens):
-            return FULL
+        if not self.alloc.can_admit_shared(pages, boundary, rem,
+                                           suffix_bucket, t,
+                                           req.max_new_tokens):
+            return None
         slot = self.free.popleft()
         prefix_ids, region_ids = self.alloc.admit_shared(
-            slot, pages, rem, suffix_bucket, t, req.max_new_tokens)
+            slot, pages, boundary, rem, suffix_bucket, t,
+            req.max_new_tokens)
         if rem > 0:
             # copy-on-write: the boundary page is duplicated BEFORE the
             # suffix prefill appends into it — the donor's page is never

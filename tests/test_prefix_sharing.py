@@ -272,7 +272,7 @@ def test_refcnt_shared_page_survives_every_release_order():
         al.register(np.arange(4), 0)
         pid = al.owned[0][0]
         # slot 1 maps the same page via shared admission
-        al.admit_shared(1, [pid], rem=0, suffix_bucket=4, true_len=8,
+        al.admit_shared(1, [pid], None, rem=0, suffix_bucket=4, true_len=8,
                         max_new=1)
         assert al.refcnt[pid] == 3
         for holder in order:
@@ -298,8 +298,9 @@ def test_cow_region_never_aliases_a_live_reader():
     al.register(np.arange(12), 0)
     prefix, boundary, rem = al.match(np.arange(11))
     assert len(prefix) == 2 and boundary is not None and rem == 2
-    pre_ids, region = al.admit_shared(1, prefix, rem=rem, suffix_bucket=4,
-                                      true_len=11, max_new=2)
+    pre_ids, region = al.admit_shared(1, prefix, boundary, rem=rem,
+                                      suffix_bucket=4, true_len=11,
+                                      max_new=2)
     live = set(al.owned[0]) | set(int(p) for p in pre_ids)
     assert live.isdisjoint(int(p) for p in region)
     assert int(boundary) not in region           # COW copies, never writes
@@ -316,7 +317,7 @@ def test_fill_share_retire_refill_equals_fresh_fill():
     al.admit(0, bucket_len=8, true_len=8, max_new=2)
     al.register(np.arange(8), 0)
     prefix, _, _ = al.match(np.arange(8, dtype=np.int64))
-    al.admit_shared(1, prefix, rem=0, suffix_bucket=4, true_len=8,
+    al.admit_shared(1, prefix, None, rem=0, suffix_bucket=4, true_len=8,
                     max_new=2)
     _check_sharing_invariants(al)
     al.release(0)
@@ -358,8 +359,10 @@ def test_pops_never_fail_under_random_churn():
             start = len(prefix) * 4 + rem
             if prefix:
                 sb = -(-(t - start) // 4) * 4
-                if al.can_admit_shared(len(prefix), rem, sb, t, max_new):
-                    al.admit_shared(slot, prefix, rem, sb, t, max_new)
+                if al.can_admit_shared(prefix, boundary, rem, sb, t,
+                                       max_new):
+                    al.admit_shared(slot, prefix, boundary, rem, sb, t,
+                                    max_new)
                     al.register(chain, slot)     # dedups onto the prefix
                     live[slot] = (t, max_new)
             elif al.can_admit(-(-t // 4) * 4, t, max_new):
@@ -376,6 +379,88 @@ def test_pops_never_fail_under_random_churn():
             del live[slot]
         _check_sharing_invariants(al)
     assert al.peak_pages <= al.num_pages - 1
+
+
+def test_can_admit_shared_excludes_pinned_prefix_pages():
+    """The matched prefix pages must not fund their own region allocation:
+    retaining them at admission makes them unevictable, so an availability
+    check that counts them as reclaimable overpromises and _pop_free
+    asserts. Repro: 3-page pool, retired chain indexes pages for 8 tokens
+    (rc 1), one truly free page, shared admission needing 2 region pages."""
+    al = _alloc(num_pages=4, ps=4)               # 3 usable pages
+    al.admit(0, bucket_len=8, true_len=8, max_new=0)
+    al.register(np.arange(8), 0)
+    al.release(0)                                # 2 index-only pages, 1 free
+    assert len(al.free) == 1 and al.reclaimable == 2
+    prompt = np.concatenate([np.arange(8), np.arange(50, 58)])
+    prefix, boundary, rem = al.match(prompt)
+    assert len(prefix) == 2 and boundary is None and rem == 0
+    # needs 2 region pages but pinning the 2 matched pages leaves only the
+    # single free page available — must refuse, not crash later
+    assert not al.can_admit_shared(prefix, boundary, rem=0, suffix_bucket=8,
+                                   true_len=16, max_new=0)
+    # a region that fits the one truly free page is admissible
+    assert al.can_admit_shared(prefix, boundary, rem=0, suffix_bucket=4,
+                               true_len=12, max_new=0)
+    al.admit_shared(1, prefix, boundary, rem=0, suffix_bucket=4,
+                    true_len=12, max_new=0)
+    _check_sharing_invariants(al)
+
+
+def test_reclaimable_counts_only_transitively_evictable_pages():
+    """An index-only interior node above a dedup-shadowed, slot-mapped
+    descendant is NOT reclaimable: evict_one only frees refcount-1 leaves,
+    so it can never reach the ancestors while the descendant's page stays
+    mapped — counting them would overpromise availability."""
+    al = _alloc(num_pages=8, ps=4)
+    al.admit(0, bucket_len=8, true_len=8, max_new=0)
+    al.register(np.arange(8), 0)                 # nodes X,Y hold slot 0's pages
+    al.release(0)                                # X,Y refcount 1 (index-only)
+    al.admit(1, bucket_len=12, true_len=12, max_new=0)
+    al.register(np.arange(12), 1)                # X,Y dedup'd (slot 1 maps its
+                                                 # own duplicates); new leaf Z
+                                                 # holds slot 1's page (rc 2)
+    # X and Y are rc 1 but sit above the unevictable leaf Z
+    assert al.reclaimable == 0
+    assert al.index.evict_one(al) is None
+    # admission must see only the truly free pages
+    free_now = len(al.free)
+    assert not al.can_admit(bucket_len=4 * (free_now + 1),
+                            true_len=4 * (free_now + 1), max_new=0)
+    al.release(1)                                # Z drops to rc 1: the whole
+    assert al.reclaimable == 3                   # chain is evictable again
+
+
+def test_shared_admission_falls_back_to_standard_path():
+    """Bucket rounding can make the shared reservation LARGER than the
+    standard one (rem + bucket(t - start) > bucket(t)): when the shared
+    region cannot be reserved, the scheduler must fall through to standard
+    admission instead of reporting FULL forever — otherwise the request
+    starves in a small pool even though it fits."""
+    cfg = get_arch("chatglm3-6b").reduced()
+    run = _run_for(cfg)
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(11)
+    stem = rng.integers(0, cfg.vocab_size, (8,), dtype=np.int32)
+    fork = np.concatenate([stem[:5],
+                           rng.integers(0, cfg.vocab_size, (3,),
+                                        dtype=np.int32)])
+    # 4 usable pages, ps=4, prompt_bucket=8: the forked prompt (t=8, match
+    # ends at 5) would need 3 region pages on top of 2 pinned index pages
+    # (7 > pool) while the standard path needs only 3 total
+    engine = SlotEngine(run, capacity=1, max_len=16, chunk=4, paged=True,
+                        page_size=4, num_pages=5, prompt_bucket=8,
+                        prefix_sharing=True)
+    reqs = [Request(rid=0, prompt=stem, max_new_tokens=2),
+            Request(rid=1, prompt=fork, max_new_tokens=2)]
+    report = serve(engine, params, reqs)
+    assert len(report.served) == 2               # nobody starves
+    assert report.stats["shared_admissions"] == 0
+    for r in report.served:
+        ref, _ = generate(run, params, jnp.asarray(r.prompt)[None],
+                          max_new_tokens=r.max_new_tokens, max_len=16)
+        np.testing.assert_array_equal(np.asarray(r.tokens),
+                                      np.asarray(ref)[0], str(r.rid))
 
 
 def test_allocator_reduces_to_unshared_arithmetic_when_sharing_off():
