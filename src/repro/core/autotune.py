@@ -114,6 +114,42 @@ def _ssm_cell(t: int, batch: int = 2, din: int = 32, n: int = 8):
     return build
 
 
+def _ssm_decode_cell(batch: int = 4, din: int = 32, n: int = 8):
+    """One mamba-bucket ssm_decode cell: a single decode token's selective
+    state update at [batch, din]. The bucket is keyed on rank, not size,
+    so ``scale`` grows the batch axis."""
+    def build(scale: int):
+        b_ = batch * scale
+        x = jax.random.normal(_key(0), (b_, din), jnp.float32)
+        g = jax.nn.softplus(jax.random.normal(_key(1), (b_, din),
+                                              jnp.float32))
+        a = -jnp.abs(jax.random.normal(_key(2), (din, n), jnp.float32))
+        b = jax.random.normal(_key(3), (b_, n), jnp.float32)
+        c = jax.random.normal(_key(4), (b_, n), jnp.float32)
+        m = jax.random.normal(_key(5), (din,), jnp.float32)
+        h = jax.random.normal(_key(6), (b_, din, n), jnp.float32)
+        return (x, g, a, b, c, m, h), {}
+    return build
+
+
+def _mlstm_decode_cell(batch: int = 4, heads: int = 4, dh: int = 16):
+    """One mlstm-bucket ssm_decode cell: a single decode token's matrix-LSTM
+    cell update. All operands are arrays (the state tuple is passed as two
+    positional tensors plus the stabilizer) so shape collection works."""
+    def build(scale: int):
+        b_ = batch * scale
+        qx = jax.random.normal(_key(0), (b_, heads, dh), jnp.float32)
+        kx = jax.random.normal(_key(1), (b_, heads, dh), jnp.float32)
+        vx = jax.random.normal(_key(2), (b_, heads, dh), jnp.float32)
+        li = jax.random.normal(_key(3), (b_, heads), jnp.float32)
+        lf = jax.random.normal(_key(4), (b_, heads), jnp.float32)
+        m = jnp.abs(jax.random.normal(_key(5), (b_, heads), jnp.float32))
+        cst = jax.random.normal(_key(6), (b_, heads, dh, dh), jnp.float32)
+        nst = jax.random.normal(_key(7), (b_, heads, dh), jnp.float32)
+        return (qx, kx, vx, li, lf, m, cst, nst), {}
+    return build
+
+
 def _attn_decode_cell(s: int, batch: int = 4, hq: int = 4, hkv: int = 2,
                       d: int = 32, mla_rope_dim: int = 0):
     """One attn_decode cell: ``batch`` sequences of staggered lengths over a
@@ -210,8 +246,9 @@ def _moe_decode_cell(e: int, batch: int = 4, k: int = 2, d: int = 64,
 # MoE archs dispatch their decode FFN through "moe_decode" (the dropless
 # per-token path) — so a tuned policy applies to the real serve decode
 # path, alongside the row ops (gemm/rmsnorm/entropy rows_s) every
-# projection / norm / exit check dispatches through. Only the Mamba/xLSTM
-# decode recurrences remain inline (ROADMAP follow-up).
+# projection / norm / exit check dispatches through, and "ssm_decode" —
+# the Mamba/xLSTM single-token recurrences — so every serve-time mixer
+# is now dispatch-tuned.
 CELLS: Dict[Tuple[str, str], Callable] = {
     ("gemm", "rows_s"): _gemm_cell(8),
     ("gemm", "rows_m"): _gemm_cell(256),
@@ -226,6 +263,8 @@ CELLS: Dict[Tuple[str, str], Callable] = {
     ("attention", "prefill"): _attention_cell(128),
     ("ssm_scan", "decode"): _ssm_cell(1),
     ("ssm_scan", "scan"): _ssm_cell(128),
+    ("ssm_decode", "mamba"): _ssm_decode_cell(),
+    ("ssm_decode", "mlstm"): _mlstm_decode_cell(),
     ("attn_decode", "kv_s"): _attn_decode_cell(128),
     ("attn_decode", "kv_l"): _attn_decode_cell(2048),
     ("attn_decode_paged", "kv_s"): _paged_attn_cell(8),     # 8*16  = 128 kv
@@ -321,6 +360,13 @@ def arch_cells(cfg, *, capacity: int = 8, bucket_len: int = 64,
             1, batch=rows_s, din=d_inner, n=n_state)
         cells[("ssm_scan", "scan")] = _ssm_cell(
             bucket_len, batch=1, din=d_inner, n=n_state)
+        cells[("ssm_decode", "mamba")] = _ssm_decode_cell(
+            batch=rows_s, din=d_inner, n=n_state)
+    if getattr(cfg, "xlstm", None) is not None:
+        from repro.models.xlstm import _mlstm_dims
+        d_in, dh = _mlstm_dims(cfg)
+        cells[("ssm_decode", "mlstm")] = _mlstm_decode_cell(
+            batch=rows_s, heads=d_in // dh, dh=dh)
     if cfg.moe is not None:
         moe_bucket = "e_s" if cfg.moe.num_experts <= 16 else "e_l"
         cells[("moe_decode", moe_bucket)] = _moe_decode_cell(
@@ -359,6 +405,11 @@ def _cost_args(op: str, shapes) -> Optional[tuple]:
         if op == "ssm_scan":
             u, a = shapes[0], shapes[2]
             return (u[0], u[1], u[2], a[-1])
+        if op == "ssm_decode":
+            xs = shapes[0]
+            if len(xs) == 2:                     # mamba: x [B, Din], a [Din, N]
+                return (xs[0], xs[1], shapes[2][-1])
+            return (xs[0], xs[1] * xs[2], xs[2])  # mlstm: x [B, H, dh]
     except (IndexError, TypeError):
         pass
     return None

@@ -170,6 +170,12 @@ def _decode_kv_bucket(shapes, _dtype):
     return "kv_s" if int(shapes[1][2]) <= 1024 else "kv_l"
 
 
+def _ssm_decode_bucket(shapes, _dtype):
+    # (x, g, a, ...): the mamba decode step feeds rank-2 activations
+    # [B, Din]; the mlstm cell feeds rank-3 per-head tensors [B, H, dh]
+    return "mamba" if len(shapes[0]) == 2 else "mlstm"
+
+
 def _moe_bucket(shapes, _dtype):
     # (x [B,d], expert_idx [B,K], gate [B,K], w_gate [E,d,h], ...): bucket
     # by routed-expert count E — the knob that decides whether a per-token
@@ -183,6 +189,7 @@ _BUCKET_FNS: Dict[str, Callable] = {
     "entropy_exit": _rows_bucket,
     "attention": _attention_bucket,
     "ssm_scan": _ssm_bucket,
+    "ssm_decode": _ssm_decode_bucket,
     "attn_decode": _decode_kv_bucket,
     "attn_decode_paged": _paged_bucket,
     "moe_decode": _moe_bucket,
@@ -194,6 +201,7 @@ _OP_BUCKETS: Dict[str, Tuple[str, ...]] = {
     "entropy_exit": ("rows_s", "rows_m", "rows_l"),
     "attention": ("decode", "prefill"),
     "ssm_scan": ("decode", "scan"),
+    "ssm_decode": ("mamba", "mlstm"),
     "attn_decode": ("kv_s", "kv_l"),
     "attn_decode_paged": ("kv_s", "kv_l"),
     "moe_decode": ("e_s", "e_l"),
@@ -473,6 +481,7 @@ def _ensure_builtin_backends():
     from repro.kernels.entropy_exit import ops as _entropy_ops   # noqa: F401
     from repro.kernels.flash_attention import ops as _fa_ops     # noqa: F401
     from repro.kernels.ssm_scan import ops as _ssm_ops           # noqa: F401
+    from repro.kernels.ssm_decode import ops as _ssm_dec_ops     # noqa: F401
     from repro.kernels.attn_decode import ops as _decode_ops     # noqa: F401
     from repro.kernels.paged_attention import ops as _paged_ops  # noqa: F401
     from repro.kernels.moe_decode import ops as _moe_ops         # noqa: F401

@@ -1,0 +1,35 @@
+"""Jit'd wrapper + XAIF registration for recurrent-state decode steps.
+
+Buckets: ``mamba`` (x is rank-2 [B, Din]) vs ``mlstm`` (x is rank-3
+[B, H, dh]) — see ``repro.core.xaif._BUCKET_FNS``.
+"""
+from __future__ import annotations
+
+from repro.core import xaif
+from repro.kernels.ssm_decode import ref as _ref
+from repro.kernels.ssm_decode import ssm_decode as _k
+
+
+def ssm_decode_cost(b, d, n, dtype_bytes=4):
+    # state update + output reduction; state dominates the traffic
+    return {"flops": 8.0 * b * d * n,
+            "hbm_bytes": dtype_bytes * b * d * (2 * n + 3)}
+
+
+@xaif.register("ssm_decode", "ref", cost_fn=ssm_decode_cost,
+               description="jnp single-token SSM/mLSTM decode recurrence")
+def ssm_decode_ref_op(x, g, a, b, c, m, h, n=None):
+    return _ref.ssm_decode_ref(x, g, a, b, c, m, h, n)
+
+
+@xaif.register("ssm_decode", "pallas", cost_fn=ssm_decode_cost,
+               description="fused decode recurrence, state read/written "
+                           "once per token (VMEM-resident tile)",
+               tunables={"bd": (128, 256)})
+def ssm_decode_pallas_op(x, g, a, b, c, m, h, n=None, *,
+                         interpret: bool = False, bd: int = 256):
+    if n is None:
+        return _k.mamba_decode_pallas(x, g, a, b, c, m, h, bd=bd,
+                                      interpret=interpret)
+    return _k.mlstm_decode_pallas(x, g, a, b, c, m, h, n,
+                                  interpret=interpret)

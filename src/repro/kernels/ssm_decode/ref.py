@@ -1,0 +1,64 @@
+"""Pure-jnp oracle for single-token recurrent-state decode steps.
+
+One op, two shape families (XAIF buckets):
+
+* ``mamba`` — the selective-SSM decode recurrence (one token through the
+  Mamba mixer).  Operands are the fp32 tensors the mixer already computed:
+  ``x`` = conv+silu activation u [B, Din], ``g`` = dt [B, Din] (softplus
+  output), ``a`` = A [Din, N], ``b``/``c`` = input/output projections
+  [B, N], ``m`` = d_skip [Din], ``h`` = SSM state [B, Din, N].  Returns
+  (y [B, Din], h_new [B, Din, N]).
+
+* ``mlstm`` — the matrix-LSTM decode cell.  ``x``/``g``/``a`` = q/k/v
+  [B, H, dh] (fp32), ``b``/``c`` = input/forget log-gates [B, H], ``m`` =
+  the running max-stabilizer state [B, H], ``h`` = matrix cell state
+  [B, H, dh, dh], ``n`` = normalizer state [B, H, dh].  Returns
+  (h_out [B, H, dh], (c_new, n_new, m_new)).
+
+The op order below is copied verbatim from the previously-inline decode
+paths in ``repro.models.mamba`` / ``repro.models.xlstm`` so routing the
+recurrences through XAIF stays bitwise-identical.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_decode_ref(x: jax.Array, g: jax.Array, a: jax.Array, b: jax.Array,
+                     c: jax.Array, m: jax.Array, h: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array]:
+    da = jnp.exp(g[:, :, None] * a)                      # [B, Din, N]
+    db = (g * x)[..., None] * b[:, None, :]
+    h_new = da * h + db
+    y = jnp.sum(h_new * c[:, None, :], axis=-1)          # [B, Din]
+    y = y + m * x
+    return y, h_new
+
+
+def mlstm_decode_ref(x: jax.Array, g: jax.Array, a: jax.Array, b: jax.Array,
+                     c: jax.Array, m: jax.Array, h: jax.Array, n: jax.Array
+                     ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array,
+                                                 jax.Array]]:
+    qx, kx, vx, li, lf = x, g, a, b, c
+    m_new = jnp.maximum(lf + m, li)
+    fw = jnp.exp(lf + m - m_new)
+    iw = jnp.exp(li - m_new)
+    c_new = fw[..., None, None] * h + iw[..., None, None] * (
+        kx[..., :, None] * vx[..., None, :])             # [B, H, dh, dh]
+    n_new = fw[..., None] * n + iw[..., None] * kx
+    h_num = jnp.einsum("bhd,bhde->bhe", qx, c_new)
+    denom = jnp.maximum(jnp.abs(jnp.sum(qx * n_new, axis=-1)),
+                        jnp.exp(-m_new))
+    h_out = h_num / denom[..., None]                     # [B, H, dh]
+    return h_out, (c_new, n_new, m_new)
+
+
+def ssm_decode_ref(x: jax.Array, g: jax.Array, a: jax.Array, b: jax.Array,
+                   c: jax.Array, m: jax.Array, h: jax.Array,
+                   n: Optional[jax.Array] = None):
+    if n is None:
+        return mamba_decode_ref(x, g, a, b, c, m, h)
+    return mlstm_decode_ref(x, g, a, b, c, m, h, n)

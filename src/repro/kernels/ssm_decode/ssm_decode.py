@@ -1,0 +1,125 @@
+"""Pallas TPU kernels for the single-token recurrent decode steps.
+
+Both cells are pure VPU work (elementwise + small reductions, no MXU):
+the win over XLA is fusing the whole state update into one VMEM-resident
+pass so the [B, Din, N] / [B, H, dh, dh] state is read and written exactly
+once per token.
+
+* Mamba: grid (B, Din/bd) — each program owns a [bd, N] state tile.
+  VMEM @ bd=256, N=16 fp32: state in+out 2*16 KiB + operands ~4 KiB.
+* mLSTM: grid (B,) — each program owns a head-stacked [H, dh, dh] cell
+  state (dh <= 128 for every config in the zoo, so one program per batch
+  row keeps the whole cell resident).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._pltpu_compat import compiler_params as _compiler_params
+
+
+def _mamba_kernel(x_ref, g_ref, a_ref, b_ref, c_ref, m_ref, h_ref,
+                  y_ref, hout_ref):
+    x = x_ref[0].astype(jnp.float32)          # [bd]
+    g = g_ref[0].astype(jnp.float32)          # [bd]
+    a = a_ref[...].astype(jnp.float32)        # [bd, N]
+    b = b_ref[0].astype(jnp.float32)          # [N]
+    c = c_ref[0].astype(jnp.float32)          # [N]
+    m = m_ref[0].astype(jnp.float32)          # [bd]
+    h = h_ref[0].astype(jnp.float32)          # [bd, N]
+    da = jnp.exp(g[:, None] * a)
+    db = (g * x)[:, None] * b[None, :]
+    h_new = da * h + db
+    y = jnp.sum(h_new * c[None, :], axis=-1) + m * x
+    y_ref[0] = y.astype(y_ref.dtype)
+    hout_ref[0] = h_new.astype(hout_ref.dtype)
+
+
+def mamba_decode_pallas(x, g, a, b, c, m, h, *, bd: int = 256,
+                        interpret: bool = False):
+    bsz, din = x.shape
+    n = a.shape[-1]
+    bd = min(bd, din)
+    while din % bd:
+        bd //= 2
+    grid = (bsz, din // bd)
+    y, h_new = pl.pallas_call(
+        _mamba_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bd), lambda b_, di: (b_, di)),       # x
+            pl.BlockSpec((1, bd), lambda b_, di: (b_, di)),       # g
+            pl.BlockSpec((bd, n), lambda b_, di: (di, 0)),        # a
+            pl.BlockSpec((1, n), lambda b_, di: (b_, 0)),         # b
+            pl.BlockSpec((1, n), lambda b_, di: (b_, 0)),         # c
+            pl.BlockSpec((1, bd), lambda b_, di: (0, di)),        # m (d_skip)
+            pl.BlockSpec((1, bd, n), lambda b_, di: (b_, di, 0)),  # h
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bd), lambda b_, di: (b_, di)),
+            pl.BlockSpec((1, bd, n), lambda b_, di: (b_, di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, din), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, din, n), jnp.float32),
+        ],
+        compiler_params=_compiler_params(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(x, g, a, b, c, m.reshape(1, din), h)
+    return y, h_new
+
+
+def _mlstm_kernel(x_ref, g_ref, a_ref, b_ref, c_ref, m_ref, h_ref, n_ref,
+                  hout_ref, cout_ref, nout_ref, mout_ref):
+    qx = x_ref[0].astype(jnp.float32)         # [H, dh]
+    kx = g_ref[0].astype(jnp.float32)
+    vx = a_ref[0].astype(jnp.float32)
+    li = b_ref[0].astype(jnp.float32)         # [H]
+    lf = c_ref[0].astype(jnp.float32)
+    m = m_ref[0].astype(jnp.float32)
+    cst = h_ref[0].astype(jnp.float32)        # [H, dh, dh]
+    nst = n_ref[0].astype(jnp.float32)        # [H, dh]
+    m_new = jnp.maximum(lf + m, li)
+    fw = jnp.exp(lf + m - m_new)
+    iw = jnp.exp(li - m_new)
+    c_new = fw[:, None, None] * cst + iw[:, None, None] * (
+        kx[:, :, None] * vx[:, None, :])
+    n_new = fw[:, None] * nst + iw[:, None] * kx
+    h_num = jnp.sum(qx[:, :, None] * c_new, axis=1)       # [H, dh]
+    denom = jnp.maximum(jnp.abs(jnp.sum(qx * n_new, axis=-1)),
+                        jnp.exp(-m_new))
+    hout_ref[0] = (h_num / denom[:, None]).astype(hout_ref.dtype)
+    cout_ref[0] = c_new.astype(cout_ref.dtype)
+    nout_ref[0] = n_new.astype(nout_ref.dtype)
+    mout_ref[0] = m_new.astype(mout_ref.dtype)
+
+
+def mlstm_decode_pallas(x, g, a, b, c, m, h, n, *, interpret: bool = False):
+    bsz, hh, dh = x.shape
+    vec = pl.BlockSpec((1, hh, dh), lambda b_: (b_, 0, 0))
+    gate = pl.BlockSpec((1, hh), lambda b_: (b_, 0))
+    cell = pl.BlockSpec((1, hh, dh, dh), lambda b_: (b_, 0, 0, 0))
+    h_out, c_new, n_new, m_new = pl.pallas_call(
+        _mlstm_kernel,
+        grid=(bsz,),
+        in_specs=[vec, vec, vec, gate, gate, gate, cell, vec],
+        out_specs=[vec, cell, vec, gate],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, hh, dh), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, hh, dh, dh), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, hh, dh), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, hh), jnp.float32),
+        ],
+        compiler_params=_compiler_params(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )(x, g, a, b, c, m, h, n)
+    return h_out, (c_new, n_new, m_new)

@@ -38,6 +38,16 @@ copy-on-write at the fork page) and only the unshared suffix is prefilled.
 ``--shared-prefix-len N`` prepends a common N-token prefix to every prompt
 to exercise it. Greedy tokens are identical with sharing on or off.
 
+``--preemption`` / ``--priority N`` / ``--prefill-chunk C`` route the
+stream through the overload-control scheduler (``serve/overload.py``):
+optimistic page admission whose growth preempts (host-swaps or
+re-prefills) the lowest-priority victim instead of rejecting new work,
+N aged priority classes, per-request TTFT shedding (``--slo-ttft-ms``),
+and long prompts admitted as C-token prefill chunks interleaved with
+decode. Invalid combinations (``--preemption`` without ``--paged``, a
+chunk size off the page grid, a recurrent arch with ``--prefill-chunk``)
+die at argument parsing with an actionable message.
+
 ``--temperature`` / ``--top-k`` / ``--top-p`` switch the scan body from
 greedy argmax to temperature / top-k / nucleus sampling through per-slot
 PRNG keys (``--sample-seed`` makes streams reproducible; a per-request
@@ -68,6 +78,7 @@ from repro.core import xaif
 from repro.dist import sharding as shd
 from repro.models import lm
 from repro.serve.engine import SlotEngine
+from repro.serve.overload import OverloadConfig
 from repro.serve.scheduler import poisson_requests, serve
 
 # serve-time layout: weights tp-sharded over the model axis and REPLICATED
@@ -134,6 +145,26 @@ def main():
                     help="give every request a common prompt prefix of "
                          "this many tokens (demo workload for "
                          "--prefix-sharing)")
+    ap.add_argument("--preemption", action="store_true",
+                    help="overload control: optimistic page admission with "
+                         "priority-aware preemption — victims are host-"
+                         "swapped or re-prefilled instead of new arrivals "
+                         "being rejected (requires --paged)")
+    ap.add_argument("--priority", type=int, default=0, metavar="N",
+                    help="number of priority classes: each request draws a "
+                         "priority in [0, N) (higher = sooner; aged so "
+                         "nothing starves). N <= 1 keeps a single class. "
+                         "Routed through the overload scheduler")
+    ap.add_argument("--prefill-chunk", type=int, default=0, metavar="C",
+                    help="chunked prefill: admit long prompts as C-token "
+                         "prefill chunks interleaved with decode chunks, "
+                         "bounding the stall a long prompt inflicts on "
+                         "running requests (requires --paged; C must be a "
+                         "multiple of --page-size)")
+    ap.add_argument("--slo-ttft-ms", type=float, default=0.0,
+                    help="stamp every request with this first-token SLO; "
+                         "the overload scheduler sheds queued requests the "
+                         "moment the SLO is already missed (0 = off)")
     ap.add_argument("--sample-seed", type=int, default=0,
                     help="base seed of the per-slot sampling PRNG keys")
     ap.add_argument("--seed", type=int, default=0)
@@ -158,6 +189,19 @@ def main():
     if args.prefix_sharing and args.gated:
         ap.error("--prefix-sharing cannot be combined with --gated "
                  "(implied by --paged being incompatible with --gated)")
+    if args.preemption and not args.paged:
+        ap.error("--preemption requires --paged: optimistic admission and "
+                 "the host-swap pool operate on KV pages — add --paged")
+    if args.prefill_chunk:
+        if not args.paged:
+            ap.error("--prefill-chunk requires --paged: chunk KV is "
+                     "written page-by-page into the pool — add --paged")
+        if args.prefill_chunk % args.page_size != 0:
+            ap.error(f"--prefill-chunk {args.prefill_chunk} must be a "
+                     f"multiple of --page-size {args.page_size}: chunk "
+                     f"boundaries must land on page boundaries")
+    if args.priority < 0:
+        ap.error("--priority must be >= 0 (number of priority classes)")
 
     if args.autotune:
         arch_for_cells = get_arch(args.arch).reduced()
@@ -184,14 +228,34 @@ def main():
     params = lm.init_lm(jax.random.PRNGKey(0), cfg)
     gated = args.gated and all(b.mixer == "attn" for b in cfg.block_pattern)
 
+    if args.prefill_chunk and not (
+            all(b.mixer == "attn" for b in cfg.block_pattern)
+            and cfg.mla is None and cfg.moe is None):
+        ap.error(f"--prefill-chunk needs an all-attention GQA arch (chunks "
+                 f"ride on the shared-prefill entry); {args.arch} has "
+                 f"recurrent/MLA/MoE blocks")
+
+    overload = None
+    if (args.preemption or args.priority > 1 or args.prefill_chunk
+            or args.slo_ttft_ms > 0):
+        overload = OverloadConfig(
+            mode="preempt" if args.preemption else "reject",
+            prefill_chunk=args.prefill_chunk)
+
     assert (args.shared_prefix_len + args.prompt_len_max + args.new_tokens
             <= args.max_len), "--max-len must fit prompt + generation"
+    prio_spec = None
+    if args.priority > 1:
+        vals = np.arange(args.priority)
+        prio_spec = (vals, np.full(args.priority, 1.0 / args.priority))
     requests = poisson_requests(
         num=args.requests,
         rate_hz=(args.rate if args.rate > 0 else np.inf),
         prompt_lens=(args.prompt_len_min, args.prompt_len_max),
         max_new_tokens=args.new_tokens,
-        vocab_size=cfg.vocab_size, seed=args.seed)
+        vocab_size=cfg.vocab_size, seed=args.seed,
+        priorities=prio_spec,
+        slo_ttft_ms=args.slo_ttft_ms if args.slo_ttft_ms > 0 else None)
     if args.shared_prefix_len > 0:
         # demo workload for prefix sharing: every prompt opens with the
         # same system-prompt-style prefix, unique suffix after it
@@ -215,9 +279,12 @@ def main():
     mesh_ctx = (shd.shard_ctx(mesh, SERVE_POLICY) if mesh
                 else contextlib.nullcontext())
     with mesh_ctx:
-        report = serve(engine, params, requests, realtime=args.rate > 0)
+        report = serve(engine, params, requests, realtime=args.rate > 0,
+                       overload=overload)
 
     lat = report.latency_percentiles()
+    ttft = report.ttft_percentiles()
+    itl = report.itl_percentiles()
     mesh_desc = (f" mesh={args.mesh} ({jax.device_count()} devices)"
                  if mesh else "")
     print(f"arch={cfg.name} capacity={args.capacity} "
@@ -235,6 +302,17 @@ def main():
           f"{report.wall_s:.2f}s = {report.tokens_per_s:.1f} tok/s")
     print(f"  latency: p50={lat['p50']*1e3:.0f}ms p99={lat['p99']*1e3:.0f}ms "
           f"mean={lat['mean']*1e3:.0f}ms")
+    print(f"  ttft: p50={ttft['p50']*1e3:.0f}ms p99={ttft['p99']*1e3:.0f}ms"
+          f"  itl: p50={itl['p50']*1e3:.1f}ms max={itl['max']*1e3:.1f}ms")
+    if overload is not None:
+        print(f"  overload[{overload.mode}]: "
+              f"{int(report.stats['preemptions'])} preemptions "
+              f"({int(report.stats['swap_resumes'])} swap / "
+              f"{int(report.stats['recompute_resumes'])} recompute "
+              f"resumes), {int(report.stats['chunked_admissions'])} chunked"
+              f" admissions, shed {int(report.stats['shed_ttft'])} ttft + "
+              f"{int(report.stats['shed_deadline'])} deadline, "
+              f"completion {report.completion_rate:.0%}")
     print(f"  concurrency: peak {int(report.stats['max_concurrency'])} "
           f"slots" + (f", peak pages {int(report.stats['peak_pages'])}"
                       f"/{engine.num_pages - 1}" if args.paged else ""))

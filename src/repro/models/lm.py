@@ -573,9 +573,49 @@ def copy_pages(cache: PagedLMCache, src, dst) -> PagedLMCache:
     return cache._replace(prefix=new_prefix, slots=new_slots)
 
 
+def gather_pages(cache: PagedLMCache, page_ids):
+    """Gather pool pages ``page_ids`` out of every attention layer (prefix
+    + stacked slots) — the device side of a host SWAP-OUT. Returns a
+    pytree of page blocks, position-ordered along a leading page axis
+    (stacked slot layers keep their superblock axis first); recurrent
+    layers contribute None (their state is slot-indexed, not paged)."""
+    def g(state, stacked):
+        if isinstance(state, (attn.PagedKVCache, attn.PagedMLACache)):
+            if stacked:
+                return type(state)(*(a[:, page_ids] for a in state))
+            return type(state)(*(a[page_ids] for a in state))
+        return None
+    return (tuple(g(c, False) for c in cache.prefix),
+            tuple(g(c, True) for c in cache.slots))
+
+
+def scatter_pages(cache: PagedLMCache, page_ids, blocks) -> PagedLMCache:
+    """Write swapped-out page ``blocks`` (from :func:`gather_pages`) into
+    pool pages ``page_ids`` — the device side of a SWAP-IN. The ids need
+    not match the ids the blocks were gathered from: the resumed slot maps
+    fresh pages in the same position order, so the attended bytes are
+    identical. Pad ids may repeat the scratch page 0 (never validly
+    read)."""
+    pre_b, slo_b = blocks
+
+    def s(state, blk, stacked):
+        if isinstance(state, (attn.PagedKVCache, attn.PagedMLACache)):
+            if stacked:
+                return type(state)(*(a.at[:, page_ids].set(b)
+                                     for a, b in zip(state, blk)))
+            return type(state)(*(a.at[page_ids].set(b)
+                                 for a, b in zip(state, blk)))
+        return state
+    return cache._replace(
+        prefix=tuple(s(c, b, False)
+                     for c, b in zip(cache.prefix, pre_b)),
+        slots=tuple(s(c, b, True) for c, b in zip(cache.slots, slo_b)))
+
+
 def forward_prefill_shared(params, inputs, cfg: ArchConfig,
                            policy: xaif.PolicyLike, cache: PagedLMCache,
-                           slot, ctx: attn.SharedPrefillCtx, row_ids):
+                           slot, ctx: attn.SharedPrefillCtx, row_ids,
+                           head: bool = True):
     """Fork-point prefill: run ONLY the unshared suffix of a prompt whose
     prefix KV is already resident in the page pools.
 
@@ -584,7 +624,10 @@ def forward_prefill_shared(params, inputs, cfg: ArchConfig,
     [max_pages] the slot's complete new page-table row (prefix ++ region,
     -1 beyond). Requires an all-attention, non-MLA arch (recurrent mixer
     states cannot resume from a page chain). Returns (first-token logits
-    [1, V], cache with the slot admitted at length ``ctx.true_len``)."""
+    [1, V], cache with the slot admitted at length ``ctx.true_len``).
+
+    ``head=False`` (chunked prefill's intermediate chunks): skip the LM
+    head — only the KV writes matter — and return ``(None, cache)``."""
     x = _embed(params, inputs, cfg)
     new_prefix = []
     for i in range(cfg.first_k_dense):
@@ -596,14 +639,17 @@ def forward_prefill_shared(params, inputs, cfg: ArchConfig,
                                     cfg.num_superblocks, cfg, policy,
                                     mode="prefill_shared", states=cache.slots,
                                     page_table=ctx)
+    new_cache = PagedLMCache(
+        tuple(new_prefix), new_slots,
+        cache.pos.at[slot].set(ctx.true_len.astype(jnp.int32)),
+        cache.page_table.at[slot].set(jnp.asarray(row_ids, jnp.int32)))
+    if not head:
+        return None, new_cache
     tsuf_true = ctx.true_len - ctx.start
     last = jnp.take_along_axis(
         x, jnp.reshape(tsuf_true - 1, (1, 1, 1)).astype(jnp.int32), axis=1)
     logits = _head(params, last, cfg, policy)
-    return logits[:, 0], PagedLMCache(
-        tuple(new_prefix), new_slots,
-        cache.pos.at[slot].set(ctx.true_len.astype(jnp.int32)),
-        cache.page_table.at[slot].set(jnp.asarray(row_ids, jnp.int32)))
+    return logits[:, 0], new_cache
 
 
 def forward_decode(params, tokens, cfg: ArchConfig, policy: xaif.PolicyLike,

@@ -121,12 +121,11 @@ def apply_mamba_decode(params, x: jax.Array, cfg: ArchConfig,
     xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
     dt, b, c = _split_xdbc(params, xc, cfg)               # [B, 1, ...]
     a = -jnp.exp(params["a_log"])                         # [Din, N]
-    da = jnp.exp(dt[:, 0, :, None] * a)                   # [B, Din, N]
-    db = (dt[:, 0] * xc.astype(jnp.float32)[:, 0])[..., None] \
-        * b.astype(jnp.float32)[:, 0, None, :]
-    h = da * state.ssm + db
-    y = jnp.sum(h * c.astype(jnp.float32)[:, 0, None, :], axis=-1)  # [B, Din]
-    y = y + params["d_skip"] * xc.astype(jnp.float32)[:, 0]
+    y, h = xaif.call("ssm_decode", policy,
+                     xc.astype(jnp.float32)[:, 0], dt[:, 0], a,
+                     b.astype(jnp.float32)[:, 0],
+                     c.astype(jnp.float32)[:, 0],
+                     params["d_skip"], state.ssm)         # [B, Din], [B,Din,N]
     y = y * jax.nn.silu(z.astype(jnp.float32)[:, 0])
     out = xaif.call("gemm", policy, y[:, None].astype(x.dtype),
                     params["out_proj"])

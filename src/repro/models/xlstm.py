@@ -208,15 +208,9 @@ def apply_mlstm_decode(params, x: jax.Array, cfg: ArchConfig,
     kx = k[:, :, 0].astype(jnp.float32)
     vx = v[:, :, 0].astype(jnp.float32)
     li, lf = logi[:, :, 0], logf[:, :, 0]                    # [B, H]
-    m_new = jnp.maximum(lf + state.m, li)
-    fw = jnp.exp(lf + state.m - m_new)
-    iw = jnp.exp(li - m_new)
-    c = fw[..., None, None] * state.c + iw[..., None, None] * (
-        kx[..., :, None] * vx[..., None, :])                 # [B,H,dh,dh]
-    n = fw[..., None] * state.n + iw[..., None] * kx
-    h_num = jnp.einsum("bhd,bhde->bhe", qx, c)
-    denom = jnp.maximum(jnp.abs(jnp.sum(qx * n, axis=-1)), jnp.exp(-m_new))
-    h_out = h_num / denom[..., None]                         # [B, H, dh]
+    h_out, (c, n, m_new) = xaif.call(
+        "ssm_decode", policy, qx, kx, vx, li, lf,
+        state.m, state.c, state.n)                           # [B, H, dh]
     h_out = _mlstm_headnorm(params, h_out[:, :, None, :], cfg.norm_eps)[:, :, 0]
     h_out = h_out.reshape(b, 1, d_in) * params["norm_scale"]
     out = (h_out * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)

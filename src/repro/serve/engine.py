@@ -337,6 +337,35 @@ def make_prefill_slot_shared(run: RunConfig, suffix_bucket: int,
     return prefill_slot
 
 
+def make_prefill_chunk(run: RunConfig, chunk_len: int, prefix_cap: int,
+                       page_size: int):
+    """One INTERMEDIATE chunk of a chunked prefill: run ``chunk_len``
+    prompt tokens against the slot's already-resident prefix and write
+    their KV into the slot's next region pages — no admission, no LM head
+    (``head=False``), no DecodeState.
+
+    Chunk boundaries are page-aligned (the scheduler asserts
+    ``chunk_len % page_size == 0``), so the resident prefix always ends
+    exactly at a page boundary: ``n_prefix == start``, no COW page, and a
+    zero-length prefix (the FIRST chunk) degenerates to a fully-masked
+    scratch gather. One trace per (chunk_len, pow2 prefix cap)."""
+    cfg, policy = run.arch, run.accel
+    n_region = chunk_len // page_size
+
+    def prefill_chunk(params, cache, tokens, start, slot, prefix_ids,
+                      region_ids, row_ids):
+        ctx = attn.SharedPrefillCtx(prefix_ids, region_ids, start, start,
+                                    start + chunk_len)
+        _, cache = lm.forward_prefill_shared(params, tokens, cfg, policy,
+                                             cache, slot, ctx, row_ids,
+                                             head=False)
+        return cache
+
+    prefill_chunk.n_region = n_region
+    prefill_chunk.prefix_cap = prefix_cap
+    return prefill_chunk
+
+
 def make_decode_chunk(run: RunConfig, steps: int, gated: bool = False,
                       sampler: Optional[Callable] = None):
     """One jitted lax.scan of ``steps`` decode steps over the slot batch.
@@ -458,7 +487,8 @@ class SlotEngine:
                  sharding: Optional[ShardingPolicy] = None,
                  temperature: float = 0.0, top_k: int = 0,
                  top_p: float = 1.0, sample_seed: int = 0,
-                 prefix_sharing: bool = False):
+                 prefix_sharing: bool = False,
+                 persistent_prefix_index: bool = False):
         cfg = run.arch
         if gated:
             assert (cfg.early_exit is not None
@@ -467,14 +497,21 @@ class SlotEngine:
                 "gated decode needs an attention-only single-exit arch"
         assert not (gated and paged), \
             "gated decode is not page-aware yet (ROADMAP follow-up)"
+        # the shared-prefill entry (prefix sharing AND chunked prefill ride
+        # on it) needs an all-attention GQA arch: recurrent mixer states
+        # cannot resume from a page chain, MLA latents are not yet
+        # share-indexed, and capacity-grouped MoE prefill is
+        # suffix-length dependent
+        self.shared_prefill_ok = (
+            all(b.mixer == "attn" for b in cfg.block_pattern)
+            and cfg.mla is None and cfg.moe is None)
         if prefix_sharing:
             assert paged, "prefix sharing requires the paged engine"
-            assert (all(b.mixer == "attn" for b in cfg.block_pattern)
-                    and cfg.mla is None and cfg.moe is None), \
-                ("prefix sharing needs an all-attention GQA arch: recurrent "
-                 "mixer states cannot resume from a page chain, MLA latents "
-                 "are not yet share-indexed, and capacity-grouped MoE "
-                 "prefill is suffix-length dependent")
+            assert self.shared_prefill_ok, \
+                "prefix sharing needs an all-attention GQA arch"
+        if persistent_prefix_index:
+            assert prefix_sharing, \
+                "a persistent PrefixIndex needs prefix_sharing=True"
         self.run = run
         self.capacity = capacity
         self.max_len = max_len
@@ -495,6 +532,13 @@ class SlotEngine:
         self.top_p = top_p
         self.sample_seed = sample_seed
         self.prefix_sharing = prefix_sharing
+        self.persistent_prefix_index = persistent_prefix_index
+        # (cache, state, alloc) parked by the last serve() call when the
+        # index is persistent — the next serve() resumes the resident pool
+        # (radix cache intact) instead of a fresh one. The scheduler POPS
+        # it before reuse, so a stale handle can never alias a donated
+        # cache.
+        self.resident = None
         self._sampler = make_sampler(temperature, top_k, top_p)
         # prefix layers inherit their mixer from the pattern, so all-attn
         # patterns are pad-safe end to end; recurrent mixers are not, and
@@ -534,7 +578,12 @@ class SlotEngine:
                                donate_argnums=(1, 2), **jit_kw)
         self._prefill = {}                   # bucket_len -> jitted fn
         self._prefill_shared = {}            # (suffix_bucket, pcap) -> fn
+        self._prefill_chunk = {}             # (chunk_len, pcap) -> fn
         self._copy_page = None               # lazily jitted COW copy
+        self._gather_pages = {}              # n_ids -> jitted swap-out
+        self._scatter_pages = {}             # n_ids -> jitted swap-in
+        self._restore_slot = None            # lazily jitted resume
+        self._deactivate = None              # lazily jitted preempt kill
 
     # -- mesh plumbing -----------------------------------------------------
 
@@ -685,7 +734,7 @@ class SlotEngine:
         of the COW page ``region_ids[0]``). ``row`` is the slot's complete
         host mirror page-table row. One trace per (suffix bucket, pow2
         prefix cap). Returns (cache, st, first_token)."""
-        assert self.prefix_sharing
+        assert self.paged and self.shared_prefill_ok
         prompt = jnp.asarray(prompt, jnp.int32)
         t = int(prompt.shape[0])
         assert 0 < start < t and t + max_new <= self.max_len
@@ -732,6 +781,153 @@ class SlotEngine:
                 jnp.asarray(row, jnp.int32))
         self.prefill_tokens += suffix_bucket
         return self._prefill_shared[key](*args + self._seed_args(seed))
+
+    # -- chunked prefill ---------------------------------------------------
+
+    def prefill_chunk(self, params, cache, chunk_tokens, start: int,
+                      slot: int, prefix_ids, region_ids, row):
+        """Run ONE intermediate chunk of a chunked prefill (no admission,
+        no logits): ``chunk_tokens`` (exactly C tokens, C page-aligned) are
+        prefilled at absolute positions [start, start + C) against the
+        slot's resident pages ``prefix_ids`` and written into the next
+        ``region_ids``. ``row`` is the slot's complete mirror page-table
+        row. One trace per (C, pow2 prefix cap). Returns the cache."""
+        assert self.paged and self.shared_prefill_ok
+        chunk_tokens = jnp.asarray(chunk_tokens, jnp.int32)
+        c_len = int(chunk_tokens.shape[0])
+        assert c_len % self.page_size == 0 and start % c_len == 0, \
+            (c_len, start, self.page_size)
+        n_full = int(np.asarray(prefix_ids).shape[0])
+        assert n_full * self.page_size == start, (n_full, start)
+        assert int(np.asarray(region_ids).shape[0]) == \
+            c_len // self.page_size
+        pcap = 1 << max(0, n_full - 1).bit_length() if n_full > 1 else 1
+        key = (c_len, pcap)
+        if key not in self._prefill_chunk:
+            self.prefill_traces += 1
+            make = make_prefill_chunk(self.run, c_len, pcap, self.page_size)
+            kw = {}
+            if self._shardings is not None:
+                params_sh, cache_sh, _ = self._shardings
+                rep = NamedSharding(self.mesh, P())
+                tok_sh = NamedSharding(self.mesh, P(None, None))
+                vec = NamedSharding(self.mesh, P(None))
+                kw = dict(in_shardings=(params_sh, cache_sh, tok_sh,
+                                        rep, rep, vec, vec, vec),
+                          out_shardings=cache_sh)
+            self._prefill_chunk[key] = jax.jit(self._traced(make),
+                                               donate_argnums=(1,), **kw)
+        pids = np.full((pcap,), -1, np.int32)
+        pids[:n_full] = np.asarray(prefix_ids, np.int32)
+        self.prefill_tokens += c_len
+        return self._prefill_chunk[key](
+            params, cache, chunk_tokens[None],
+            jnp.asarray(start, jnp.int32), jnp.asarray(slot, jnp.int32),
+            jnp.asarray(pids), jnp.asarray(region_ids, jnp.int32),
+            jnp.asarray(row, jnp.int32))
+
+    # -- preemption: host swap + slot resume -------------------------------
+
+    def _pad_pow2(self, page_ids) -> np.ndarray:
+        # pad to ONE fixed shape (pow2 of the per-slot page cap) rather
+        # than the next pow2 of the count: swap-outs happen mid-stream
+        # under overload, where a fresh jit trace per new page count would
+        # stall every in-flight decode for far longer than the extra pad
+        # blocks cost to move
+        ids = np.asarray(page_ids, np.int32)
+        assert len(ids) <= self.max_pages, (len(ids), self.max_pages)
+        cap = 1 << max(0, self.max_pages - 1).bit_length() \
+            if self.max_pages > 1 else 1
+        out = np.zeros((cap,), np.int32)     # pad -> scratch page 0
+        out[:len(ids)] = ids
+        return out
+
+    def fetch_pages(self, cache, page_ids):
+        """SWAP-OUT: gather the pool pages ``page_ids`` (position order)
+        from every attention layer into one host-transferable pytree. Ids
+        are padded to the next pow2 with the scratch page, so traces are
+        shared across page counts; the pad blocks ride along (their bytes
+        are garbage and are re-written to scratch on restore). Output
+        shardings are inferred from the committed cache."""
+        assert self.paged
+        pids = self._pad_pow2(page_ids)
+        cap = len(pids)
+        if cap not in self._gather_pages:
+            self._gather_pages[cap] = jax.jit(
+                self._traced(lm.gather_pages))
+        blocks = self._gather_pages[cap](cache, jnp.asarray(pids))
+        return jax.device_get(blocks)
+
+    def restore_pages(self, cache, page_ids, blocks):
+        """SWAP-IN: write ``blocks`` (a :meth:`fetch_pages` result) into
+        the FRESH pool pages ``page_ids`` — same position order, possibly
+        different ids than at swap-out. Pad writes land on scratch."""
+        assert self.paged
+        pids = self._pad_pow2(page_ids)
+        cap = len(pids)
+        if cap not in self._scatter_pages:
+            kw = {}
+            if self._shardings is not None:
+                _, cache_sh, _ = self._shardings
+                kw = dict(out_shardings=cache_sh)
+            self._scatter_pages[cap] = jax.jit(
+                self._traced(lm.scatter_pages), donate_argnums=(0,), **kw)
+        return self._scatter_pages[cap](cache, jnp.asarray(pids), blocks)
+
+    def restore_slot(self, cache, st, slot: int, token: int, budget: int,
+                     pos: int, rng_row=None):
+        """Re-arm ``slot`` after a swap-in: last generated token becomes
+        the next decode input, ``budget`` tokens remain, the cache position
+        points at the one KV row not yet written (the last token's), and —
+        when the victim was sampling — its PRNG row is restored so the
+        resumed sample stream is bitwise identical."""
+        if self._restore_slot is None:
+            def restore(cache, st, slot, token, budget, pos, rng_row,
+                        has_rng):
+                st = st._replace(
+                    tokens=st.tokens.at[slot].set(token),
+                    done=st.done.at[slot].set(budget <= 0),
+                    generated=st.generated.at[slot].set(0),
+                    budget=st.budget.at[slot].set(budget),
+                    rng=st.rng.at[slot].set(
+                        jnp.where(has_rng, rng_row, st.rng[slot])))
+                cache = cache._replace(pos=cache.pos.at[slot].set(pos))
+                return cache, st
+            kw = {}
+            if self._shardings is not None:
+                _, cache_sh, state_sh = self._shardings
+                rep = NamedSharding(self.mesh, P())
+                vec = NamedSharding(self.mesh, P(None))
+                kw = dict(in_shardings=(cache_sh, state_sh, rep, rep, rep,
+                                        rep, vec, rep),
+                          out_shardings=(cache_sh, state_sh))
+            self._restore_slot = jax.jit(self._traced(restore),
+                                         donate_argnums=(0, 1), **kw)
+        has_rng = rng_row is not None
+        row = (jnp.asarray(rng_row, jnp.uint32) if has_rng
+               else jnp.zeros((2,), jnp.uint32))
+        return self._restore_slot(
+            cache, st, jnp.asarray(slot, jnp.int32),
+            jnp.asarray(token, jnp.int32), jnp.asarray(budget, jnp.int32),
+            jnp.asarray(pos, jnp.int32), row, jnp.asarray(has_rng))
+
+    def deactivate_slot(self, st, slot: int):
+        """Kill a PREEMPTED slot on device: mark it done so the next decode
+        chunk freezes its token, pins its cache position and masks it out
+        of MoE routing. Its page-table row is cleared host-side (appends
+        route to scratch); the next admission overwrites the rest."""
+        if self._deactivate is None:
+            def deact(st, slot):
+                return st._replace(done=st.done.at[slot].set(True))
+            kw = {}
+            if self._shardings is not None:
+                _, _, state_sh = self._shardings
+                rep = NamedSharding(self.mesh, P())
+                kw = dict(in_shardings=(state_sh, rep),
+                          out_shardings=state_sh)
+            self._deactivate = jax.jit(self._traced(deact),
+                                       donate_argnums=(0,), **kw)
+        return self._deactivate(st, jnp.asarray(slot, jnp.int32))
 
     # -- paged page-table sync ---------------------------------------------
 

@@ -36,9 +36,20 @@ tests/test_prefix_sharing.py):
   pages may appear in several rows — all readers);
 * admission reserves each request's WORST-CASE page count
   (max(pages mapped at admit, ceil((prompt + max_new) / ps))), so
-  on-demand growth during decode can never fail — no preemption path is
-  needed. With sharing disabled every refcount is exactly 1 and behavior
-  reduces to the PR 3 allocator.
+  on-demand growth during decode can never fail. With sharing disabled
+  every refcount is exactly 1 and behavior reduces to the PR 3 allocator.
+
+OPTIMISTIC mode (``optimistic=True``, the overload-control subsystem in
+``serve/overload.py``): admission drops the worst-case reservation and
+requires only the pages mapped RIGHT NOW (the prefill bucket / COW+suffix
+region); ``reserved`` tracks the high-water mark of actual ownership
+instead of a promise. The flip side is that ``_pop_free`` can genuinely
+run dry mid-decode — it then raises :class:`PoolExhausted` (instead of
+the reservation-accounting assert) and the overload scheduler preempts a
+victim slot, frees or host-swaps its pages and retries the growth. All
+mirror/ownership state stays consistent across a failed ``ensure`` (every
+successful pop lands in the table row before the next), so the call is
+retryable after pages are freed.
 """
 from __future__ import annotations
 
@@ -189,10 +200,17 @@ class PrefixIndex:
         return victim.page
 
 
+class PoolExhausted(RuntimeError):
+    """Raised (optimistic mode only) when a page pop finds the pool dry —
+    the overload scheduler's cue to preempt a victim and retry."""
+
+
 class PageAllocator:
     def __init__(self, num_pages: int, capacity: int, max_pages: int,
-                 page_size: int, sharing: bool = False):
+                 page_size: int, sharing: bool = False,
+                 optimistic: bool = False):
         assert num_pages >= 2, "need at least one non-scratch page"
+        self.optimistic = optimistic
         self.num_pages = num_pages
         self.page_size = page_size
         self.max_pages = max_pages
@@ -226,6 +244,9 @@ class PageAllocator:
             freed = (self.index.evict_one(self)
                      if self.index is not None else None)
             if freed is None:
+                if self.optimistic:
+                    raise PoolExhausted(
+                        "page pool dry under optimistic admission")
                 raise AssertionError(
                     "allocator exhausted despite reservation accounting")
         pid = self.free.popleft()
@@ -263,7 +284,11 @@ class PageAllocator:
                      max_new: int) -> int:
         # bucket pages are allocated up front; decode appends stop at
         # position true_len + max_new - 1 (dead-slot re-appends go to
-        # scratch or the slot's own last page — never elsewhere)
+        # scratch or the slot's own last page — never elsewhere).
+        # Optimistic mode admits on the bucket alone: growth is backed by
+        # preemption, not a promise.
+        if self.optimistic:
+            return self.pages_for(bucket_len)
         return max(self.pages_for(bucket_len),
                    self.pages_for(true_len + max_new))
 
@@ -294,7 +319,11 @@ class PageAllocator:
         """Grow ``slot`` so position ``last_pos`` has a page (on-demand
         decode allocation, covered by the admission reservation)."""
         need = last_pos // self.page_size + 1
-        assert need <= self.reserved[slot], (slot, last_pos, self.reserved)
+        if self.optimistic:
+            self.reserved[slot] = max(self.reserved[slot], need)
+        else:
+            assert need <= self.reserved[slot], (slot, last_pos,
+                                                 self.reserved)
         pages = self.owned[slot]
         while len(pages) < need:
             pid = self._pop_free()          # cannot fail: reserved
@@ -345,8 +374,11 @@ class PageAllocator:
         them — exclude them from the availability."""
         n_shared = len(prefix_pages)
         n_region = self.pages_for(rem + suffix_bucket)
-        need = max(n_region,
-                   self.pages_for(true_len + max_new) - n_shared)
+        if self.optimistic:
+            need = n_region
+        else:
+            need = max(n_region,
+                       self.pages_for(true_len + max_new) - n_shared)
         return need <= self.available - self._pinned(prefix_pages, boundary)
 
     def admit_shared(self, slot: int, prefix_pages: Sequence[int],
@@ -374,8 +406,9 @@ class PageAllocator:
                                             # the caller's next operation
         ids = list(prefix_pages) + region
         self.owned[slot] = ids
-        self.reserved[slot] = max(len(ids),
-                                  self.pages_for(true_len + max_new))
+        self.reserved[slot] = (len(ids) if self.optimistic else
+                               max(len(ids),
+                                   self.pages_for(true_len + max_new)))
         self.table[slot, :] = -1
         self.table[slot, :len(ids)] = ids
         self.dirty = True

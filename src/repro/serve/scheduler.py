@@ -20,13 +20,20 @@ the caller unserved, never silently truncated.
 The host's only per-chunk work is one fetch of (tokens, slot state) and the
 free-list bookkeeping; token validity is reconstructed from the per-slot
 generated counts, so no device round-trip happens inside the token loop.
+
+OVERLOAD CONTROL: pass ``serve(..., overload=OverloadConfig(...))`` to run
+the stream through :class:`repro.serve.overload.OverloadScheduler` instead —
+priority-aged admission, optimistic paging with preemption (host swap or
+re-prefill resume), SLO shedding and chunked prefill. This base scheduler
+keeps the PR 3 worst-case-reservation behavior and is the reject-only
+baseline the overload benchmarks compare against.
 """
 from __future__ import annotations
 
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -43,16 +50,43 @@ class Request:
     # optional per-request sample seed: identical seeded requests replay
     # the same sample stream regardless of slot placement (greedy ignores)
     seed: Optional[int] = None
+    # optional early stop: retire at the FIRST emission of this token id
+    # (kept inclusive), so ``max_new_tokens`` is a reservation CAP, not the
+    # realized length — the worst-case-vs-actual gap paged admission exploits
+    stop_token: Optional[int] = None
+    # -- overload-control knobs (all optional) -----------------------------
+    priority: int = 0                  # higher = more important
+    deadline_ms: Optional[float] = None   # complete within this, or shed
+    slo_ttft_ms: Optional[float] = None   # first token within this, or shed
 
     # lifecycle (filled by the scheduler)
     t_admitted: Optional[float] = None
+    t_first_token: Optional[float] = None
     t_finished: Optional[float] = None
     reject_reason: Optional[str] = None
+    preemptions: int = 0
     tokens: List[int] = field(default_factory=list)
+    itl: List[float] = field(default_factory=list)  # inter-token gaps (s)
 
     @property
     def latency(self) -> float:
         return self.t_finished - self.arrival
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.arrival
+
+
+def _pctiles(vals) -> Dict[str, float]:
+    a = np.asarray(vals, np.float64)
+    if a.size == 0:
+        nan = float("nan")
+        return {"p50": nan, "p99": nan, "mean": nan, "max": nan}
+    return {"p50": float(np.percentile(a, 50)),
+            "p99": float(np.percentile(a, 99)),
+            "mean": float(np.mean(a)), "max": float(np.max(a))}
 
 
 @dataclass
@@ -74,14 +108,48 @@ class ServeReport:
     def tokens_per_s(self) -> float:
         return self.decode_tokens / max(self.wall_s, 1e-9)
 
+    @property
+    def completion_rate(self) -> float:
+        return len(self.served) / max(len(self.requests), 1)
+
     def latency_percentiles(self) -> Dict[str, float]:
-        lats = np.asarray([r.latency for r in self.served])
-        if lats.size == 0:                   # every request was rejected
+        return _pctiles([r.latency for r in self.served])
+
+    def ttft_percentiles(self, min_priority: Optional[int] = None
+                         ) -> Dict[str, float]:
+        """Time-to-first-token percentiles over served requests (optionally
+        only those with ``priority >= min_priority`` — the SLO class the
+        overload benchmarks assert on)."""
+        return _pctiles([r.ttft for r in self.served
+                         if r.ttft is not None
+                         and (min_priority is None
+                              or r.priority >= min_priority)])
+
+    def itl_percentiles(self) -> Dict[str, float]:
+        """Inter-token-latency percentiles pooled over every served
+        request's decode gaps (chunk-granular: each chunk's wall time is
+        spread over the tokens it produced)."""
+        gaps: List[float] = []
+        for r in self.served:
+            gaps.extend(r.itl)
+        return _pctiles(gaps)
+
+    def breakdown(self) -> Dict[str, float]:
+        """Mean per-request time split: queue (arrival -> admission),
+        prefill (admission -> first token), decode (first token -> done)."""
+        done = [r for r in self.served if r.t_finished is not None
+                and r.t_first_token is not None and r.t_admitted is not None]
+        if not done:
             nan = float("nan")
-            return {"p50": nan, "p99": nan, "mean": nan}
-        return {"p50": float(np.percentile(lats, 50)),
-                "p99": float(np.percentile(lats, 99)),
-                "mean": float(np.mean(lats))}
+            return {"queue_s": nan, "prefill_s": nan, "decode_s": nan}
+        return {
+            "queue_s": float(np.mean(
+                [max(r.t_admitted - r.arrival, 0.0) for r in done])),
+            "prefill_s": float(np.mean(
+                [max(r.t_first_token - r.t_admitted, 0.0) for r in done])),
+            "decode_s": float(np.mean(
+                [max(r.t_finished - r.t_first_token, 0.0) for r in done])),
+        }
 
 
 # admit() outcomes
@@ -93,56 +161,87 @@ REJECTED = "rejected"  # can never be served by this engine
 class SlotScheduler:
     """Admission / retirement / backfill over a SlotEngine's slot batch."""
 
+    # overload subclass flips this; the allocator then admits on current
+    # free pages and raises PoolExhausted instead of asserting
+    _optimistic = False
+
     def __init__(self, engine: SlotEngine, params):
         self.engine = engine
         # one device_put per stream: on a mesh this commits the params to
         # their sharding so every chunk hits the jit fast path (identity on
         # a single device)
         self.params = engine.place_params(params)
-        self.cache, self.state = engine.init_state()
+        resident = None
+        if engine.persistent_prefix_index and engine.resident is not None:
+            # resume the previous serve() call's pool: radix index, page
+            # refcounts and the device cache stay warm, so recurring
+            # prefixes hit on the SECOND stream. Popped before reuse — the
+            # engine never holds a handle to a donated cache.
+            resident = engine.resident
+            engine.resident = None
+        if resident is not None:
+            self.cache, self.state, self.alloc = resident
+            self.alloc.optimistic = self._optimistic
+        else:
+            self.cache, self.state = engine.init_state()
+            self.alloc: Optional[PageAllocator] = None
+            if engine.paged:
+                self.alloc = PageAllocator(
+                    engine.num_pages, engine.capacity, engine.max_pages,
+                    engine.page_size, sharing=engine.prefix_sharing,
+                    optimistic=self._optimistic)
         self.free: deque = deque(range(engine.capacity))
         self.occupant: Dict[int, Request] = {}       # slot -> request
         self._gen_seen: Dict[int, int] = {}          # slot -> tokens recorded
         self._true_len: Dict[int, int] = {}          # slot -> prompt length
-        self.alloc: Optional[PageAllocator] = None
-        if engine.paged:
-            self.alloc = PageAllocator(engine.num_pages, engine.capacity,
-                                       engine.max_pages, engine.page_size,
-                                       sharing=engine.prefix_sharing)
+        self._budget: Dict[int, int] = {}            # slot -> admission budget
+        self._t_last: Dict[int, float] = {}          # slot -> last token time
+        self.clock: Optional[Callable[[], float]] = None   # set by serve()
         self.max_concurrency = 0                     # peak occupied slots
         self.shared_tokens = 0                       # prompt tokens NOT prefilled
         self.shared_admissions = 0                   # fork-point admissions
 
+    def _now(self, fallback: float) -> float:
+        return self.clock() if self.clock is not None else fallback
+
     # -- admission ---------------------------------------------------------
 
-    def admit(self, req: Request, now: float) -> str:
+    def admit(self, req: Request, now: float,
+              prompt: Optional[np.ndarray] = None,
+              budget: Optional[int] = None) -> str:
         """Prefill ``req`` into a free slot. Returns ADMITTED, FULL (at
         capacity — retry later) or REJECTED (impossible request — the
-        caller gets it back with ``reject_reason`` set, NOT truncated)."""
-        t = int(req.prompt.shape[0])
-        if t + req.max_new_tokens > self.engine.max_len:
+        caller gets it back with ``reject_reason`` set, NOT truncated).
+
+        ``prompt``/``budget`` override the request's own (the overload
+        scheduler resumes a preempted request by re-admitting its
+        prompt ++ generated tokens with the REMAINING budget)."""
+        prompt = req.prompt if prompt is None else prompt
+        budget = req.max_new_tokens if budget is None else budget
+        t = int(prompt.shape[0])
+        if t + budget > self.engine.max_len:
             req.reject_reason = (
-                f"prompt ({t}) + max_new_tokens ({req.max_new_tokens}) "
+                f"prompt ({t}) + max_new_tokens ({budget}) "
                 f"exceeds engine max_len ({self.engine.max_len})")
             return REJECTED
         if not self.free:
             return FULL
         if self.alloc is not None and self.alloc.index is not None:
-            res = self._admit_shared(req, now, t)
+            res = self._admit_shared(req, now, prompt, budget, t)
             if res is not None:
                 return res                           # ADMITTED
         bucket = self.engine._bucket(t)
         page_ids = None
         if self.alloc is not None:
-            if not self.alloc.can_admit(bucket, t, req.max_new_tokens):
+            if not self.alloc.can_admit(bucket, t, budget):
                 return FULL                          # admission by free pages
             slot = self.free.popleft()
-            page_ids = self.alloc.admit(slot, bucket, t, req.max_new_tokens)
+            page_ids = self.alloc.admit(slot, bucket, t, budget)
         else:
             slot = self.free.popleft()
         self.cache, self.state, tok0 = self.engine.prefill_into(
-            self.params, self.cache, self.state, req.prompt, slot,
-            req.max_new_tokens, page_ids=page_ids, seed=req.seed)
+            self.params, self.cache, self.state, prompt, slot,
+            budget, page_ids=page_ids, seed=req.seed)
         # (the jitted fill wrote this slot's device table row; any OTHER
         # pending mirror changes — e.g. rows cleared by release() — keep
         # alloc.dirty set and are pushed before the next decode chunk.
@@ -152,17 +251,18 @@ class SlotScheduler:
         if self.alloc is not None and self.alloc.index is not None:
             # index the prompt's full pages (their KV lands before any
             # matching reader's gather — device program order)
-            self.alloc.register(np.asarray(req.prompt), slot)
-        return self._finish_admit(req, slot, tok0, now, t)
+            self.alloc.register(np.asarray(prompt), slot)
+        return self._finish_admit(req, slot, tok0, now, t, budget)
 
-    def _admit_shared(self, req: Request, now: float, t: int):
+    def _admit_shared(self, req: Request, now: float, prompt: np.ndarray,
+                      budget: int, t: int):
         """Fork-point admission against the prefix index. Returns ADMITTED
         or None — either no indexed prefix, or the COW/suffix region cannot
         be reserved right now. Bucket rounding can make the shared
         reservation LARGER than the standard one (rem + bucket(t - start)
         may exceed bucket(t)), so a failed check falls through to the
         standard prefill path rather than reporting FULL."""
-        prompt = np.asarray(req.prompt)
+        prompt = np.asarray(prompt)
         pages, boundary, rem = self.alloc.match(prompt)
         if not pages:
             return None                              # min share: 1 full page
@@ -172,13 +272,11 @@ class SlotScheduler:
         start = len(pages) * ps + rem
         suffix_bucket = self.engine._bucket(t - start)
         if not self.alloc.can_admit_shared(pages, boundary, rem,
-                                           suffix_bucket, t,
-                                           req.max_new_tokens):
+                                           suffix_bucket, t, budget):
             return None
         slot = self.free.popleft()
         prefix_ids, region_ids = self.alloc.admit_shared(
-            slot, pages, boundary, rem, suffix_bucket, t,
-            req.max_new_tokens)
+            slot, pages, boundary, rem, suffix_bucket, t, budget)
         if rem > 0:
             # copy-on-write: the boundary page is duplicated BEFORE the
             # suffix prefill appends into it — the donor's page is never
@@ -187,22 +285,45 @@ class SlotScheduler:
                                                int(region_ids[0]))
         self.cache, self.state, tok0 = self.engine.prefill_into_shared(
             self.params, self.cache, self.state, prompt, start, slot,
-            req.max_new_tokens, prefix_ids, region_ids,
+            budget, prefix_ids, region_ids,
             self.alloc.table[slot], seed=req.seed)
         self.alloc.register(prompt, slot)
         self.shared_tokens += start
         self.shared_admissions += 1
-        return self._finish_admit(req, slot, tok0, now, t)
+        return self._finish_admit(req, slot, tok0, now, t, budget)
 
     def _finish_admit(self, req: Request, slot: int, tok0, now: float,
-                      t: int) -> str:
-        req.t_admitted = now
-        req.tokens.append(int(tok0))                 # per-REQUEST fetch
+                      t: int, budget: int) -> str:
+        tok_i = int(tok0)                            # device sync: prefill done
+        t_tok = max(self._now(now), req.arrival)
+        if req.t_admitted is None:
+            req.t_admitted = now
+        if req.t_first_token is None:
+            req.t_first_token = t_tok
+        req.tokens.append(tok_i)                     # per-REQUEST fetch
         self.occupant[slot] = req
         self._gen_seen[slot] = 1
         self._true_len[slot] = t
+        self._budget[slot] = budget
+        self._t_last[slot] = t_tok
         self.max_concurrency = max(self.max_concurrency, len(self.occupant))
         return ADMITTED
+
+    def admission_round(self, waiting: deque, now: float,
+                        realtime: bool) -> bool:
+        """Admit everything currently admissible, FIFO in arrival order.
+        Returns True if any request left the queue."""
+        progressed = False
+        while waiting and self.free:
+            if realtime and waiting[0].arrival > now:
+                break
+            req = waiting[0]
+            res = self.admit(req, max(now, req.arrival))
+            if res == FULL:
+                break
+            progressed = True
+            waiting.popleft()                        # ADMITTED or REJECTED
+        return progressed
 
     # -- decode + retire ---------------------------------------------------
 
@@ -211,17 +332,41 @@ class SlotScheduler:
         coverage for the positions this chunk will write (reservation-backed,
         so the pops cannot fail)."""
         chunk = self.engine.chunk
-        for slot, req in self.occupant.items():
+        for slot in self.occupant:
             gen = self._gen_seen[slot]
-            live_steps = min(chunk, req.max_new_tokens - gen)
+            live_steps = min(chunk, self._budget[slot] - gen)
             if live_steps <= 0:
                 continue                              # done: appends pinned
             pos_now = self._true_len[slot] + gen - 1
             self.alloc.ensure(slot, pos_now + live_steps - 1)
-        if self.alloc.dirty:
+        self._push_table()
+
+    def _push_table(self) -> None:
+        if self.alloc is not None and self.alloc.dirty:
             self.cache = self.engine.set_page_table(self.cache,
                                                     self.alloc.table)
             self.alloc.dirty = False
+
+    def _retire(self, slot: int, req: Request, now: float) -> None:
+        """Return a finished slot to the pool (host bookkeeping only)."""
+        del self.occupant[slot]
+        del self._gen_seen[slot]
+        del self._true_len[slot]
+        del self._budget[slot]
+        self._t_last.pop(slot, None)
+        if self.alloc is not None:
+            if self.alloc.index is not None:
+                # index the retired chain so FUTURE requests can share it.
+                # KV is resident through position t + len(tokens) - 2 only
+                # (the final token was never fed back), hence tokens[:-1].
+                # The invariant survives preemption: a resumed request's
+                # chain is its ORIGINAL prompt ++ every generated token.
+                chain = np.concatenate([
+                    np.asarray(req.prompt, np.int64),
+                    np.asarray(req.tokens[:-1], np.int64)])
+                self.alloc.register(chain, slot)
+            self.alloc.release(slot)                 # pages -> free list
+        self.free.append(slot)                       # backfill: host-only
 
     def step_chunk(self, now: float) -> int:
         """One jitted decode chunk + ONE host fetch; retire finished slots.
@@ -234,40 +379,44 @@ class SlotScheduler:
         toks_np = np.asarray(toks)
         gen_np = np.asarray(self.state.generated)
         done_np = np.asarray(self.state.done)
+        t_tok = self._now(now)
         produced = 0
         for slot, req in list(self.occupant.items()):
             fresh = int(gen_np[slot]) - self._gen_seen[slot]
             req.tokens.extend(int(t) for t in toks_np[slot, :fresh])
             self._gen_seen[slot] += fresh
             produced += fresh
+            if fresh > 0:
+                gap = max(t_tok - self._t_last.get(slot, t_tok), 0.0) / fresh
+                req.itl.extend([gap] * fresh)
+                self._t_last[slot] = t_tok
+            if req.stop_token is not None and req.stop_token in req.tokens:
+                # host-side early stop: truncate past the first stop token
+                # (inclusive) and retire — the decode scan may have run a
+                # few rows further inside this chunk; they are discarded
+                k = req.tokens.index(req.stop_token)
+                del req.tokens[k + 1:]
+                del req.itl[max(k, 0):]
+                req.t_finished = max(now, req.arrival)
+                self._retire(slot, req, now)
+                continue
             if done_np[slot]:
                 # clamp: closed-loop runs (realtime=False) may finish a
                 # request before its nominal arrival time
                 req.t_finished = max(now, req.arrival)
-                del self.occupant[slot]
-                del self._gen_seen[slot]
-                del self._true_len[slot]
-                if self.alloc is not None:
-                    if self.alloc.index is not None:
-                        # index the retired chain so FUTURE requests can
-                        # share it. KV is resident through position
-                        # t + len(tokens) - 2 only (the final token was
-                        # never fed back), hence tokens[:-1].
-                        chain = np.concatenate([
-                            np.asarray(req.prompt, np.int64),
-                            np.asarray(req.tokens[:-1], np.int64)])
-                        self.alloc.register(chain, slot)
-                    self.alloc.release(slot)         # pages -> free list
-                self.free.append(slot)               # backfill: host-only
+                self._retire(slot, req, now)
         return produced
 
     @property
     def busy(self) -> bool:
         return bool(self.occupant)
 
+    def extra_stats(self) -> Dict[str, float]:
+        return {}
+
 
 def serve(engine: SlotEngine, params, requests: List[Request],
-          realtime: bool = False) -> ServeReport:
+          realtime: bool = False, overload=None) -> ServeReport:
     """Drive a request stream to completion.
 
     ``realtime=False`` (benchmarks) admits requests as soon as a slot frees
@@ -275,27 +424,26 @@ def serve(engine: SlotEngine, params, requests: List[Request],
     delay against them via the serve clock. ``realtime=True`` waits for
     wall-clock arrivals (the Poisson simulator). Requests the engine can
     never serve come back with ``reject_reason`` set.
+
+    ``overload``: an :class:`repro.serve.overload.OverloadConfig` — route
+    the stream through the priority-aware preemptive scheduler instead of
+    this FIFO reject-only one.
     """
     waiting = deque(sorted(requests, key=lambda r: r.arrival))
     t0 = time.perf_counter()
-    sched = SlotScheduler(engine, params)
+    if overload is not None:
+        from repro.serve.overload import OverloadScheduler
+        sched = OverloadScheduler(engine, params, overload)
+    else:
+        sched = SlotScheduler(engine, params)
     decode_tokens = 0
 
     def now() -> float:
         return time.perf_counter() - t0
 
+    sched.clock = now
     while waiting or sched.busy:
-        # admit everything currently admissible
-        progressed = False
-        while waiting and sched.free:
-            if realtime and waiting[0].arrival > now():
-                break
-            req = waiting[0]
-            res = sched.admit(req, max(now(), req.arrival))
-            if res == FULL:
-                break
-            progressed = True
-            waiting.popleft()                        # ADMITTED or REJECTED
+        progressed = sched.admission_round(waiting, now(), realtime)
         if not sched.busy:
             if realtime and waiting:
                 time.sleep(max(waiting[0].arrival - now(), 0.0))
@@ -304,6 +452,11 @@ def serve(engine: SlotEngine, params, requests: List[Request],
                 break        # nothing running, nothing admissible: done
             continue
         decode_tokens += sched.step_chunk(now())
+    for req in waiting:
+        # admission stalled with an idle batch: these can never be served
+        if req.reject_reason is None:
+            req.reject_reason = ("unservable: needs more pages than an "
+                                 "idle pool can provide")
     wall = now()
     # prefill-produced first tokens count toward throughput too
     total = decode_tokens + sum(1 for r in requests if r.tokens)
@@ -316,16 +469,23 @@ def serve(engine: SlotEngine, params, requests: List[Request],
             stats["shared_tokens"] = float(sched.shared_tokens)
             stats["shared_admissions"] = float(sched.shared_admissions)
             stats["index_pages"] = float(len(sched.alloc.index))
+    stats.update(sched.extra_stats())
+    if engine.persistent_prefix_index:
+        # park the warm pool for the NEXT serve() call (popped before reuse)
+        engine.resident = (sched.cache, sched.state, sched.alloc)
     return ServeReport(requests=requests, wall_s=wall, decode_tokens=total,
                        stats=stats)
 
 
 def poisson_requests(num: int, rate_hz: float, prompt_lens,
                      max_new_tokens, vocab_size: int,
-                     seed: int = 0) -> List[Request]:
+                     seed: int = 0, priorities=None,
+                     slo_ttft_ms: Optional[float] = None) -> List[Request]:
     """Synthetic open-loop workload: exponential inter-arrival gaps at
     ``rate_hz``, prompt lengths / token budgets drawn from the given
-    (min, max) ranges."""
+    (min, max) ranges. ``priorities``: optional (values, probabilities)
+    pair sampled per request; ``slo_ttft_ms`` stamps every request with
+    the same first-token SLO."""
     rng = np.random.default_rng(seed)
     lo, hi = prompt_lens
     nlo, nhi = ((max_new_tokens, max_new_tokens)
@@ -336,9 +496,14 @@ def poisson_requests(num: int, rate_hz: float, prompt_lens,
     out = []
     for i in range(num):
         t = int(rng.integers(lo, hi + 1))
+        prio = 0
+        if priorities is not None:
+            vals, probs = priorities
+            prio = int(rng.choice(vals, p=probs))
         out.append(Request(
             rid=i,
             prompt=rng.integers(0, vocab_size, (t,), dtype=np.int32),
             max_new_tokens=int(rng.integers(nlo, nhi + 1)),
-            arrival=float(arrivals[i])))
+            arrival=float(arrivals[i]),
+            priority=prio, slo_ttft_ms=slo_ttft_ms))
     return out

@@ -1,0 +1,375 @@
+"""Overload-control subsystem: preemption, host swap, priorities, sheds,
+chunked prefill — and the allocator invariants that must survive them.
+
+Token identity is again the correctness bar: every request that completes
+under overload (including preempted-and-resumed ones, whether swap- or
+recompute-resumed, and chunk-prefilled ones) must produce exactly the
+tokens it produces on an uncontended pool. The allocator property test
+drives 300 steps of random admit/grow/preempt-swap-resume churn through
+the OPTIMISTIC allocator and re-derives every invariant from scratch each
+step (refcounts, mirror rows, free/owned disjointness, page conservation).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import (AccelConfig, RunConfig, SHAPES_BY_NAME,
+                                get_arch)
+from repro.models import lm
+from repro.serve.engine import SlotEngine, generate
+from repro.serve.overload import (HostSwapPool, OverloadConfig,
+                                  OverloadScheduler, PreemptionPolicy,
+                                  _SwapRecord)
+from repro.serve.paging import PageAllocator, PoolExhausted
+from repro.serve.scheduler import Request, ServeReport, serve
+
+ACCEL = AccelConfig()
+
+
+def _run_for(cfg):
+    return RunConfig(arch=cfg, shape=SHAPES_BY_NAME["decode_32k"],
+                     accel=ACCEL)
+
+
+# ---------------------------------------------------------------------------
+# Allocator property test: 300-step random churn under optimistic admission
+# ---------------------------------------------------------------------------
+
+
+def _check_alloc_invariants(alloc: PageAllocator, capacity: int):
+    """Re-derive every allocator invariant from scratch."""
+    # mirror rows list exactly the owned pages, -1 beyond
+    for slot in range(capacity):
+        owned = alloc.owned.get(slot, [])
+        assert list(alloc.table[slot, :len(owned)]) == owned, slot
+        assert (alloc.table[slot, len(owned):] == -1).all(), slot
+    # live slots own DISJOINT page sets (no shared admissions in this churn)
+    all_owned = [p for pages in alloc.owned.values() for p in pages]
+    assert len(all_owned) == len(set(all_owned))
+    # refcounts == (#rows mapping the page) + (1 if index-registered)
+    expect = {}
+    for pages in alloc.owned.values():
+        for p in pages:
+            expect[p] = expect.get(p, 0) + 1
+    if alloc.index is not None:
+        for p in alloc.index.pages:
+            expect[p] = expect.get(p, 0) + 1
+    assert expect == alloc.refcnt
+    # conservation: every non-scratch page is free XOR referenced
+    free = set(alloc.free)
+    held = set(alloc.refcnt)
+    assert not (free & held)
+    assert free | held == set(range(1, alloc.num_pages))
+    assert 0 not in free and 0 not in held      # scratch never circulates
+
+
+def test_optimistic_allocator_invariants_under_churn():
+    """300 random steps of admit / grow / release with preempt->swap->
+    resume round-trips whenever the pool runs dry: after EVERY step the
+    allocator's refcounts, mirror and free list are re-derived and must
+    match. Swap-resume is modelled exactly as the scheduler performs it:
+    the victim's pages are released and the request later re-admitted with
+    a bucket equal to its kept page count."""
+    rng = np.random.default_rng(7)
+    ps, cap, num_pages, max_pages = 4, 6, 14, 16
+    alloc = PageAllocator(num_pages, cap, max_pages, ps, sharing=True,
+                          optimistic=True)
+    live = {}        # slot -> [true_len, max_new, covered_pos]
+    resumable = []   # (t_resume, remaining, n_keep) from preempt-swap
+    resumes = dry = 0
+    for step in range(300):
+        op = rng.choice(["admit", "admit", "grow", "grow", "grow",
+                         "release", "resume"])
+        free_slots = [s for s in range(cap) if s not in live]
+        if op == "resume" and resumable and free_slots:
+            t_, remaining, n_keep = resumable.pop()
+            if not alloc.can_admit(n_keep * ps, t_, remaining):
+                continue
+            slot = free_slots[0]
+            alloc.admit(slot, n_keep * ps, t_, remaining)
+            live[slot] = [t_, remaining, t_ - 1]
+            resumes += 1
+        elif op == "admit" and free_slots:
+            t = int(rng.integers(1, 24))
+            mn = int(rng.integers(4, 20))
+            if t + mn > max_pages * ps:
+                continue
+            bucket = -(-t // 4) * 4
+            if not alloc.can_admit(bucket, t, mn):
+                continue
+            slot = free_slots[0]
+            alloc.admit(slot, bucket, t, mn)
+            alloc.register(rng.integers(0, 999, (t,)), slot)
+            live[slot] = [t, mn, t - 1]
+        elif op == "grow" and live:
+            slot = int(rng.choice(sorted(live)))
+            t, mn, covered = live[slot]
+            target = min(covered + int(rng.integers(1, 6)), t + mn - 1)
+            try:
+                alloc.ensure(slot, target)
+                live[slot][2] = target
+            except PoolExhausted:
+                dry += 1
+                # preempt->swap: victim's pages released, its resume
+                # re-admits pages_for(pos) pages (the scheduler's n_keep)
+                victim = int(rng.choice(sorted(live)))
+                vt, vmn, vcov = live.pop(victim)
+                gen = max(vcov + 1 - vt, 1)
+                if vmn - gen > 0:
+                    resumable.append((vt + gen, vmn - gen,
+                                      alloc.pages_for(vcov + 1)))
+                alloc.release(victim)
+        elif op == "release" and live:
+            slot = int(rng.choice(sorted(live)))
+            del live[slot]
+            alloc.release(slot)
+        _check_alloc_invariants(alloc, cap)
+    # the churn must actually exercise the interesting paths
+    assert dry >= 3 and resumes >= 3, (dry, resumes)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: preempt / swap / recompute / chunked prefill token identity
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def served():
+    """One shared model + workload + uncontended reference run."""
+    cfg = get_arch("chatglm3-6b").reduced()
+    run = _run_for(cfg)
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    protos = []
+    for i in range(10):
+        t = int(rng.integers(5, 41))       # some prompts > chunk C=16
+        protos.append(dict(
+            rid=i, prompt=rng.integers(0, cfg.vocab_size, (t,),
+                                       dtype=np.int32),
+            max_new_tokens=int(rng.integers(4, 12)),
+            priority=int(rng.integers(0, 3))))
+
+    def requests():
+        return [Request(**p) for p in protos]
+
+    eng = SlotEngine(run, capacity=3, max_len=64, chunk=4, paged=True,
+                     page_size=8)
+    ref = serve(eng, params, requests())
+    assert not ref.rejected
+    return dict(run=run, params=params, requests=requests,
+                ref_tokens={r.rid: list(r.tokens) for r in ref.served})
+
+
+def _post_serve_alloc_ok(sched_alloc: PageAllocator):
+    """After a drained stream every page is free or index-held."""
+    assert not sched_alloc.owned and not sched_alloc.reserved
+    _check_alloc_invariants(sched_alloc, sched_alloc.table.shape[0])
+
+
+def test_preempt_swap_resume_token_identity(served):
+    """A pool less than half the worst case + preemption with host swap:
+    everything completes, swaps actually happen, and every request's
+    greedy tokens equal the uncontended run bitwise."""
+    engine = SlotEngine(served["run"], capacity=3, max_len=64, chunk=4,
+                        paged=True, page_size=8, num_pages=14)
+    rep = serve(engine, served["params"], served["requests"](),
+                overload=OverloadConfig(mode="preempt"))
+    assert not rep.rejected, [r.reject_reason for r in rep.rejected]
+    assert rep.stats["preemptions"] >= 1
+    assert rep.stats["swap_resumes"] >= 1
+    assert rep.stats["peak_pages"] <= 13
+    for r in rep.served:
+        assert list(r.tokens) == served["ref_tokens"][r.rid], r.rid
+    # report plumbing: TTFT / ITL / breakdown populated for every request
+    assert all(r.t_first_token is not None for r in rep.served)
+    assert all(r.itl for r in rep.served if len(r.tokens) > 1)
+    bd = rep.breakdown()
+    assert all(np.isfinite(v) for v in bd.values())
+    assert np.isfinite(rep.ttft_percentiles()["p99"])
+    assert np.isfinite(rep.itl_percentiles()["p50"])
+    assert rep.completion_rate == 1.0
+
+
+def test_preempt_recompute_resume_token_identity(served):
+    """swap=False forces every resume through re-prefill of
+    prompt ++ generated with the remaining budget — greedy tokens must
+    still match the uncontended run."""
+    engine = SlotEngine(served["run"], capacity=3, max_len=64, chunk=4,
+                        paged=True, page_size=8, num_pages=14)
+    rep = serve(engine, served["params"], served["requests"](),
+                overload=OverloadConfig(mode="preempt", swap=False))
+    assert not rep.rejected
+    assert rep.stats["preemptions"] >= 1
+    assert rep.stats["swap_resumes"] == 0
+    assert rep.stats["recompute_resumes"] >= 1
+    for r in rep.served:
+        assert list(r.tokens) == served["ref_tokens"][r.rid], r.rid
+
+
+def test_chunked_prefill_token_identity(served):
+    """Chunked prefill on an uncontended pool: long prompts go through
+    C-token chunks + a shared-prefill tail, short ones through ordinary
+    admission — all token-identical to the monolithic-prefill run."""
+    engine = SlotEngine(served["run"], capacity=3, max_len=64, chunk=4,
+                        paged=True, page_size=8)
+    rep = serve(engine, served["params"], served["requests"](),
+                overload=OverloadConfig(mode="reject", prefill_chunk=16))
+    assert not rep.rejected
+    assert rep.stats["chunked_admissions"] >= 2
+    assert rep.stats["preemptions"] == 0
+    for r in rep.served:
+        assert list(r.tokens) == served["ref_tokens"][r.rid], r.rid
+
+
+def test_priority_order_and_aging_fields(served):
+    """Closed-loop, capacity 2: admission order follows priority, high
+    first (aging is negligible at t~0), and the decode drain backfills in
+    priority order too."""
+    engine = SlotEngine(served["run"], capacity=2, max_len=64, chunk=4,
+                        paged=True, page_size=8)
+    reqs = [Request(rid=i, prompt=np.arange(4 + i, dtype=np.int32) + 1,
+                    max_new_tokens=4, priority=p)
+            for i, p in enumerate([0, 2, 1, 0, 2, 1])]
+    rep = serve(engine, served["params"], reqs,
+                overload=OverloadConfig(mode="reject"))
+    assert not rep.rejected
+    order = [r.priority for r in sorted(rep.served,
+                                        key=lambda r: r.t_admitted)]
+    assert order == sorted(order, reverse=True), order
+
+
+def test_every_shed_and_reject_path_sets_reason(served):
+    """Oversized prompts and TTFT-SLO sheds come back with
+    ``reject_reason`` set; nothing vanishes from the report."""
+    engine = SlotEngine(served["run"], capacity=2, max_len=64, chunk=4,
+                        paged=True, page_size=8, num_pages=9)
+    reqs = [
+        Request(rid=0, prompt=np.arange(60, dtype=np.int32) + 1,
+                max_new_tokens=8),                        # > max_len
+        Request(rid=1, prompt=np.arange(6, dtype=np.int32) + 1,
+                max_new_tokens=4),                        # serves fine
+        Request(rid=2, prompt=np.arange(6, dtype=np.int32) + 1,
+                max_new_tokens=4, slo_ttft_ms=1e-3),      # sheds in queue
+        Request(rid=3, prompt=np.arange(6, dtype=np.int32) + 1,
+                max_new_tokens=4, slo_ttft_ms=1e-3),
+    ]
+    rep = serve(engine, served["params"], reqs,
+                overload=OverloadConfig(mode="preempt"))
+    by = {r.rid: r for r in rep.requests}
+    assert "max_len" in by[0].reject_reason
+    assert by[1].reject_reason is None and len(by[1].tokens) == 4
+    # the SLO pair: whichever wasn't admitted before its (sub-ms) SLO
+    # lapsed is shed WITH a reason; admitted ones serve normally
+    for rid in (2, 3):
+        r = by[rid]
+        assert (r.reject_reason is None) == bool(r.tokens)
+        if r.reject_reason is not None:
+            assert "TTFT SLO" in r.reject_reason
+    assert len(rep.served) + len(rep.rejected) == len(reqs)
+
+
+def test_idle_pool_unservable_sets_reason(served):
+    """A request FULL against an IDLE batch can never be served — the
+    overload scheduler rejects it with a reason instead of spinning. (Not
+    reachable through a legal engine geometry end-to-end, so the guard is
+    exercised at the scheduler level with a constrained free list.)"""
+    from collections import deque
+    engine = SlotEngine(served["run"], capacity=2, max_len=64, chunk=4,
+                        paged=True, page_size=8, num_pages=9)
+    sched = OverloadScheduler(engine, served["params"],
+                              OverloadConfig(mode="preempt"))
+    sched.clock = lambda: 0.0
+    sched.alloc.free = deque(list(sched.alloc.free)[:2])  # 2 usable pages
+    req = Request(rid=0, prompt=np.arange(30, dtype=np.int32) + 1,
+                  max_new_tokens=4)                       # needs 4 pages
+    waiting = deque([req])
+    assert sched.admission_round(waiting, 0.0, False)
+    assert not waiting
+    assert "unservable" in req.reject_reason
+
+
+def test_persistent_prefix_index_across_serve_calls(served):
+    """Opt-in engine-owned index: the SECOND serve() call fork-admits
+    against pages left resident by the first, and the cross-stream tokens
+    still match the solo reference."""
+    run, params = served["run"], served["params"]
+    cfg = run.arch
+    rng = np.random.default_rng(11)
+    common = rng.integers(0, cfg.vocab_size, (24,), dtype=np.int32)
+    engine = SlotEngine(run, capacity=2, max_len=64, chunk=4, paged=True,
+                        page_size=8, num_pages=32, prefix_sharing=True,
+                        persistent_prefix_index=True)
+
+    def stream(n, seed):
+        r = np.random.default_rng(seed)
+        return [Request(
+            rid=i, prompt=np.concatenate([
+                common, r.integers(0, cfg.vocab_size, (5,),
+                                   dtype=np.int32)]),
+            max_new_tokens=6) for i in range(n)]
+
+    rep1 = serve(engine, params, stream(3, seed=1))
+    assert engine.resident is not None
+    rep2 = serve(engine, params, stream(1, seed=2))
+    # the single stream-2 request found stream-1's prefix pages resident
+    assert rep2.stats["shared_admissions"] == 1, rep2.stats
+    assert rep2.stats["shared_tokens"] >= 24 - 8   # >= full matched pages
+    # identity vs the solo reference loop
+    req = rep2.served[0]
+    solo, _ = generate(run, params, np.asarray(req.prompt)[None],
+                       req.max_new_tokens)
+    assert list(req.tokens) == [int(x) for x in np.asarray(solo)[0]]
+    assert not rep1.rejected and not rep2.rejected
+
+
+# ---------------------------------------------------------------------------
+# Host-level units (no model)
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_policy_ordering():
+    pol = PreemptionPolicy()
+    mk = lambda prio: Request(rid=0, prompt=np.zeros(1, np.int32),
+                              max_new_tokens=1, priority=prio)
+    # lowest priority wins
+    assert pol.pick([(0, mk(2), 9, 1), (1, mk(0), 1, 9)]) == 1
+    # tie -> most pages
+    assert pol.pick([(0, mk(1), 2, 5), (1, mk(1), 7, 5)]) == 1
+    # tie -> least progress
+    assert pol.pick([(0, mk(1), 4, 9), (1, mk(1), 4, 2)]) == 1
+    assert pol.pick([]) is None
+
+
+def test_host_swap_pool_budget():
+    pool = HostSwapPool(budget_bytes=100)
+    rec = lambda n: _SwapRecord([1], None, np.zeros(2, np.uint32), n)
+    assert pool.put(0, rec(60)) and pool.used == 60
+    assert not pool.put(1, rec(50))          # over budget -> refused
+    assert pool.put(1, rec(40)) and pool.peak == 100
+    assert pool.pop(0).nbytes == 60 and pool.used == 40
+    assert pool.pop(0) is None
+
+
+def test_report_percentile_helpers():
+    reqs = []
+    for i, prio in enumerate([0, 0, 2, 2]):
+        r = Request(rid=i, prompt=np.zeros(4, np.int32), max_new_tokens=4,
+                    arrival=0.0, priority=prio)
+        r.t_admitted, r.t_first_token, r.t_finished = 0.1, 0.2 + i, 1.0 + i
+        r.itl = [0.01 * (i + 1)] * 3
+        reqs.append(r)
+    rej = Request(rid=9, prompt=np.zeros(4, np.int32), max_new_tokens=4)
+    rej.reject_reason = "shed: test"
+    rep = ServeReport(requests=reqs + [rej], wall_s=1.0, decode_tokens=12,
+                      stats={})
+    assert rep.completion_rate == pytest.approx(4 / 5)
+    assert rep.ttft_percentiles()["p50"] == pytest.approx(1.7)
+    hi = rep.ttft_percentiles(min_priority=2)
+    assert hi["mean"] == pytest.approx((2.2 + 3.2) / 2)
+    assert rep.itl_percentiles()["max"] == pytest.approx(0.04)
+    bd = rep.breakdown()
+    assert bd["queue_s"] == pytest.approx(0.1)
+    assert bd["prefill_s"] == pytest.approx(np.mean([0.1 + i for i in
+                                                     range(4)]))
