@@ -174,6 +174,43 @@ def main():
           f"{int(ov.stats['swap_resumes'])} swap resumes, tokens identical "
           f"to the uncontended run; hi-pri p99 TTFT {hi['p99']*1e3:.0f}ms")
 
+    # --- fault tolerance: chaos injection + snapshot/restore replay --------
+    # serve_resilient() wraps the same stream in a restart supervisor:
+    # every few chunks it snapshots the engine (DecodeState + allocated KV
+    # pages + allocator + queue + per-request progress), and ANY crash out
+    # of a serve step — here a deterministic FaultInjector killing the 2nd
+    # decode chunk — restores the snapshot and replays. Replay is exact:
+    # the survivors' tokens are bitwise identical to a fault-free run,
+    # greedy and seeded sampling alike. The same injector reaches every
+    # hot-path site (prefill / decode / page_alloc / swap / backend), and
+    # `repro.launch.serve --inject-fault site=decode,chunk=3` runs this as
+    # a CLI smoke. Runtime guards ride along: a NaN/Inf logit quarantines
+    # only the poisoned slot (reject_reason "nan-quarantined: ...";
+    # co-batched requests unaffected), --watchdog-ms bounds chunk wall
+    # time, and a core.xaif.CircuitBreaker degrades a raising dispatched
+    # backend to "ref" for that (op, bucket) cell instead of crashing the
+    # stream at all.
+    from repro.serve.faults import FaultInjector
+    from repro.serve.resilient import serve_resilient
+
+    chaos_engine = SlotEngine(run, capacity=2, max_len=64, chunk=4,
+                              paged=True, page_size=8)
+    def chaos_requests():
+        return [Request(rid=i, prompt=np.asarray(prompt[i % 4]),
+                        max_new_tokens=12) for i in range(4)]
+    ref = {r.rid: list(r.tokens)
+           for r in serve(chaos_engine, params, chaos_requests()).served}
+    inj = FaultInjector(schedule={"decode": [1]})
+    rep = serve_resilient(chaos_engine, params, chaos_requests(),
+                          snapshot_every=2, injector=inj)
+    assert rep.completion_rate == 1.0
+    assert all(list(r.tokens) == ref[r.rid] for r in rep.served)
+    print(f"fault tolerance: decode chunk killed and replayed — "
+          f"{int(rep.stats['restarts'])} restart, "
+          f"{int(rep.stats['faults_injected'])} injected fault, recovery "
+          f"{rep.stats['recovery_s_max']*1e3:.0f}ms, 4/4 served, tokens "
+          f"identical to the fault-free run")
+
 
 if __name__ == "__main__":
     main()

@@ -424,6 +424,13 @@ def call(op: str, policy: PolicyLike, *args, **kwargs):
     cost). Explicit kwargs always win over policy tuning params; a backend
     whose ``supports`` predicate rejects the shapes falls back to the
     policy's default backend.
+
+    When a :class:`CircuitBreaker` is installed, a backend that RAISES at
+    call time is degraded around: the breaker pins this (op, bucket) cell
+    to its fallback backend for the rest of the stream, records a
+    FaultEvent, and the call is re-dispatched to the fallback. Dispatch
+    happens at trace time, so the jit trace completes with the fallback
+    baked in — no partial graphs.
     """
     _ensure_builtin_backends()
     if isinstance(policy, DispatchPolicy):
@@ -435,16 +442,85 @@ def call(op: str, policy: PolicyLike, *args, **kwargs):
         if not entry.accepts(shapes, dtype):
             entry = _accepting_fallback(op, policy, shapes, dtype)
             rule = DispatchRule(entry.name)
-        allowed = entry.tunable_names
-        merged = {k: v for k, v in rule.tuning if k in allowed}
-        merged.update(kwargs)
+        tuning = rule.tuning
     else:
+        bucket = WILDCARD
         entry = get_entry(op, policy.backend_for(op))
-        merged = dict(kwargs)
-    if entry.takes_interpret and "interpret" not in merged:
-        # Pallas backends take interpret= so the CPU container can run them.
-        merged["interpret"] = policy.interpret
-    return entry.fn(*args, **merged)
+        tuning = ()
+
+    def _kwargs(e: BackendEntry) -> Dict:
+        allowed = e.tunable_names
+        m = {k: v for k, v in tuning if k in allowed}
+        m.update(kwargs)
+        if e.takes_interpret and "interpret" not in m:
+            # Pallas backends take interpret= so the CPU container can run
+            # them.
+            m["interpret"] = policy.interpret
+        return m
+
+    breaker = _BREAKER
+    if breaker is not None:
+        pin = breaker.pinned.get((op, bucket))
+        if pin is not None and pin != entry.name:
+            entry = get_entry(op, pin)           # cell already degraded
+        if entry.name != breaker.fallback:
+            try:
+                return entry.fn(*args, **_kwargs(entry))
+            except Exception as exc:             # noqa: BLE001 — degrade
+                breaker.trip(op, bucket, entry.name, exc)
+                entry = get_entry(op, breaker.fallback)
+            return entry.fn(*args, **_kwargs(entry))
+    return entry.fn(*args, **_kwargs(entry))
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker — graceful degradation for backends that raise at call
+# (trace) time. The serving supervisor installs one so a broken tuned
+# kernel downgrades the cell instead of killing the stream.
+# ---------------------------------------------------------------------------
+
+
+class CircuitBreaker:
+    """Pins (op, bucket) cells whose backend raised to ``fallback``.
+
+    A trip is permanent for the breaker's lifetime — the failed backend is
+    never retried mid-stream (a raising kernel would otherwise re-raise on
+    every re-trace). Each trip is logged as a
+    :class:`repro.dist.fault.FaultEvent` (kind ``"circuit-breaker"``) into
+    ``events`` — shareable with a :class:`~repro.serve.faults.FaultInjector`
+    so one timeline covers injected faults and the degradations they caused.
+    """
+
+    def __init__(self, fallback: str = "ref", events=None):
+        self.fallback = fallback
+        self.pinned: Dict[Tuple[str, str], str] = {}
+        self.events = events if events is not None else []
+        self.trips = 0
+
+    def trip(self, op: str, bucket: str, backend: str, exc: Exception):
+        from repro.dist.fault import FaultEvent
+        self.pinned[(op, bucket)] = self.fallback
+        self.trips += 1
+        self.events.append(FaultEvent(
+            "circuit-breaker", self.trips,
+            f"op={op} bucket={bucket} backend={backend} -> "
+            f"{self.fallback}: {type(exc).__name__}: {exc}"))
+
+
+_BREAKER: Optional["CircuitBreaker"] = None
+
+
+def install_breaker(breaker: Optional["CircuitBreaker"]
+                    ) -> Optional["CircuitBreaker"]:
+    """Install ``breaker`` as the process-wide circuit breaker (None to
+    remove). Returns the previous one, so callers can restore it."""
+    global _BREAKER
+    prev, _BREAKER = _BREAKER, breaker
+    return prev
+
+
+def active_breaker() -> Optional["CircuitBreaker"]:
+    return _BREAKER
 
 
 def backends_for(op: str) -> Tuple[str, ...]:

@@ -88,8 +88,15 @@ def run_with_restarts(init_fn: Callable[[], Any],
     at that global step (first attempt only) to exercise the recovery path.
     """
     failed_once = False
+    state = None
     for attempt in range(max_restarts + 1):
-        state, start = loop.resume(init_fn())
+        if state is None:
+            # Lazy init: build fresh state at most ONCE. Restart attempts
+            # reuse the failed attempt's state as the restore template
+            # (restore only needs the pytree STRUCTURE), so init_fn is
+            # never re-run with its result discarded.
+            state = init_fn()
+        state, start = loop.resume(state)
         if attempt:
             loop.record("restart", start, f"attempt {attempt}")
 

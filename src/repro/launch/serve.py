@@ -167,6 +167,22 @@ def main():
                          "moment the SLO is already missed (0 = off)")
     ap.add_argument("--sample-seed", type=int, default=0,
                     help="base seed of the per-slot sampling PRNG keys")
+    ap.add_argument("--inject-fault", default="", metavar="SPEC",
+                    help="chaos smoke: SPEC is site=<name>,chunk=<n> — "
+                         "inject one deterministic fault at the n-th call "
+                         "of that site (sites: prefill, decode, page_alloc, "
+                         "swap, backend), serve under the restart "
+                         "supervisor, and assert 100%% completion with "
+                         "tokens identical to a fault-free reference run")
+    ap.add_argument("--watchdog-ms", type=float, default=0.0,
+                    help="per-chunk watchdog budget for the restart "
+                         "supervisor: a chunk slower than this wall-clock "
+                         "bound is treated as a crash and replayed from "
+                         "the latest snapshot (0 = off)")
+    ap.add_argument("--snapshot-every", type=int, default=4,
+                    help="supervisor snapshot cadence in decode chunks")
+    ap.add_argument("--max-restarts", type=int, default=8,
+                    help="supervisor restart budget before giving up")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--policy", default=autotune_mod.DEFAULT_POLICY_PATH,
                     help="path to a persisted DispatchPolicy JSON")
@@ -202,6 +218,47 @@ def main():
                      f"boundaries must land on page boundaries")
     if args.priority < 0:
         ap.error("--priority must be >= 0 (number of priority classes)")
+    fault_spec = None
+    if args.inject_fault:
+        from repro.serve.faults import SITES
+        kv = {}
+        for part in args.inject_fault.split(","):
+            if "=" not in part:
+                ap.error(f"--inject-fault {args.inject_fault!r}: expected "
+                         f"site=<name>,chunk=<n> (got segment {part!r})")
+            k, v = part.split("=", 1)
+            kv[k.strip()] = v.strip()
+        site, chunk = kv.pop("site", None), kv.pop("chunk", None)
+        if kv:
+            ap.error(f"--inject-fault: unknown key(s) {sorted(kv)}; the "
+                     f"spec is site=<name>,chunk=<n>")
+        if site not in SITES:
+            ap.error(f"--inject-fault site must be one of {SITES} "
+                     f"(got {site!r})")
+        try:
+            chunk = int(chunk)
+        except (TypeError, ValueError):
+            ap.error(f"--inject-fault chunk must be an integer >= 0 "
+                     f"(got {chunk!r})")
+        if chunk < 0:
+            ap.error(f"--inject-fault chunk must be >= 0 (got {chunk})")
+        if site in ("page_alloc", "swap") and not args.paged:
+            ap.error(f"--inject-fault site={site} requires --paged: that "
+                     f"site only exists on the paged KV path")
+        fault_spec = (site, chunk)
+    if args.watchdog_ms < 0:
+        ap.error("--watchdog-ms must be >= 0 (0 = off)")
+    if args.snapshot_every < 1:
+        ap.error("--snapshot-every must be >= 1")
+    if args.max_restarts < 0:
+        ap.error("--max-restarts must be >= 0")
+    resilient = fault_spec is not None or args.watchdog_ms > 0
+    if resilient and (args.preemption or args.priority > 1
+                      or args.prefill_chunk or args.slo_ttft_ms > 0):
+        ap.error("--inject-fault/--watchdog-ms run the restart supervisor, "
+                 "which drives the base FIFO scheduler only — drop the "
+                 "overload flags (--preemption/--priority/--prefill-chunk/"
+                 "--slo-ttft-ms)")
 
     if args.autotune:
         arch_for_cells = get_arch(args.arch).reduced()
@@ -218,6 +275,13 @@ def main():
               f"({len(policy.rules)} rules)")
     else:
         policy = AccelConfig()
+
+    if fault_spec is not None and fault_spec[0] == "backend":
+        from repro.serve.faults import register_chaos_backends
+        register_chaos_backends()
+        # route a hot row op through the chaos backend (= ref + injected
+        # trace-time faults) so the dispatched-backend site actually fires
+        policy = xaif.DispatchPolicy.make({"rmsnorm": "chaos"})
 
     cfg = get_arch(args.arch).reduced()
     if args.threshold is not None and cfg.early_exit is not None:
@@ -278,9 +342,30 @@ def main():
     # in the serve path (identity when no mesh is installed)
     mesh_ctx = (shd.shard_ctx(mesh, SERVE_POLICY) if mesh
                 else contextlib.nullcontext())
+    chaos_ref = None
     with mesh_ctx:
-        report = serve(engine, params, requests, realtime=args.rate > 0,
-                       overload=overload)
+        if resilient:
+            import copy
+
+            from repro.serve.faults import FaultInjector
+            from repro.serve.resilient import serve_resilient
+            # fault-free reference stream first (same engine: traces stay
+            # warm; fresh request copies: lifecycle fields are mutated)
+            chaos_ref = copy.deepcopy(requests)
+            serve(engine, params, chaos_ref, realtime=args.rate > 0)
+            injector = None
+            if fault_spec is not None:
+                site, at = fault_spec
+                injector = FaultInjector(schedule={site: [at]},
+                                         seed=args.seed)
+            report = serve_resilient(
+                engine, params, requests, realtime=args.rate > 0,
+                snapshot_every=args.snapshot_every,
+                max_restarts=args.max_restarts,
+                watchdog_ms=args.watchdog_ms or None, injector=injector)
+        else:
+            report = serve(engine, params, requests,
+                           realtime=args.rate > 0, overload=overload)
 
     lat = report.latency_percentiles()
     ttft = report.ttft_percentiles()
@@ -327,6 +412,30 @@ def main():
               f"(first: {report.rejected[0].reject_reason})")
     print(f"  exit stats: exit_rate={report.stats['exit_rate']:.2%} "
           f"gated_fraction={report.stats['gated_fraction']:.2%}")
+    if chaos_ref is not None:
+        ref_toks = {r.rid: r.tokens for r in chaos_ref}
+        mismatched = [r.rid for r in requests if r.tokens != ref_toks[r.rid]]
+        spec = (f"site={fault_spec[0]} chunk={fault_spec[1]}"
+                if fault_spec else "watchdog-only")
+        rec = report.stats.get("recovery_s_max", 0.0)
+        print(f"  chaos[{spec}]: restarts={int(report.stats['restarts'])} "
+              f"faults={int(report.stats['faults_injected'])} "
+              f"recovery_max={rec * 1e3:.1f}ms "
+              f"completion={report.completion_rate:.0%} "
+              f"identical_tokens={len(requests) - len(mismatched)}"
+              f"/{len(requests)}")
+        if injector is not None:
+            # a scheduled fault that never fires makes the smoke vacuous —
+            # the stream must be long enough to reach the chunk index
+            assert injector.fired >= 1, (
+                f"--inject-fault {spec} never fired: the stream made only "
+                f"{injector.calls[fault_spec[0]]} {fault_spec[0]} calls — "
+                "raise --new-tokens/--requests or lower chunk")
+        assert report.completion_rate == 1.0, \
+            f"chaos run shed requests: {[r.reject_reason for r in report.rejected]}"
+        assert not mismatched, \
+            f"chaos run diverged from fault-free reference: rids {mismatched}"
+        print("  chaos: 100% completion, tokens identical to fault-free run")
 
 
 if __name__ == "__main__":

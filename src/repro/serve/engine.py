@@ -175,6 +175,13 @@ class DecodeState(NamedTuple):
     sample stream depends only on its slot and admission, never on which
     other slots happen to be live (the same composition-independence
     argument as the per-slot cache positions).
+
+    ``quarantined`` is the NaN/Inf logit guard's verdict: a live slot whose
+    step logits go non-finite (a poisoned KV page, an overflowed
+    activation) is frozen — its garbage token is NOT emitted, it is marked
+    done — and flagged here so the host can shed exactly that request.
+    Co-batched slots never read each other's state, so the quarantine is
+    surgical by construction.
     """
     tokens: jax.Array        # [S] i32 — last token per slot (next step input)
     done: jax.Array          # [S] bool
@@ -184,6 +191,7 @@ class DecodeState(NamedTuple):
     exit_cnt: jax.Array      # f32 — Σ over steps of early-exited live slots
     gated_layers: jax.Array  # f32 — Σ of per-slot gated layer fractions
     live_cnt: jax.Array      # f32 — Σ over steps of live slots
+    quarantined: jax.Array   # [S] bool — NaN/Inf guard tripped for the slot
 
 
 def init_decode_state(capacity: int, seed: int = 0) -> DecodeState:
@@ -196,7 +204,8 @@ def init_decode_state(capacity: int, seed: int = 0) -> DecodeState:
         budget=jnp.zeros((capacity,), jnp.int32),
         rng=jax.vmap(lambda i: jax.random.fold_in(base, i))(
             jnp.arange(capacity)),
-        exit_cnt=z, gated_layers=z, live_cnt=z)
+        exit_cnt=z, gated_layers=z, live_cnt=z,
+        quarantined=jnp.zeros((capacity,), bool))
 
 
 def make_sampler(temperature: float, top_k: int = 0,
@@ -257,7 +266,8 @@ def _admit_slot(st: DecodeState, logits0, slot, max_new,
         done=st.done.at[slot].set(max_new <= 1),
         generated=st.generated.at[slot].set(1),
         budget=st.budget.at[slot].set(max_new),
-        rng=rng)
+        rng=rng,
+        quarantined=st.quarantined.at[slot].set(False))
     return st, tok0
 
 
@@ -417,21 +427,30 @@ def make_decode_chunk(run: RunConfig, steps: int, gated: bool = False,
             split = jax.vmap(lambda k: jax.random.split(k, 2))(st.rng)
             next_tok = jax.vmap(sampler)(split[:, 0], logits)
             new_rng = split[:, 1]
-        next_tok = jnp.where(live, next_tok, st.tokens)
+        # NaN/Inf logit guard: a live slot whose logits went non-finite
+        # (poisoned KV, overflowed activation) produced a garbage token —
+        # freeze it instead of emitting, mark the slot done and flag it
+        # quarantined. ONLY that slot: batch elements never read each
+        # other's KV, so co-batched requests are numerically untouched.
+        bad = live & ~jnp.all(
+            jnp.isfinite(logits.astype(jnp.float32)), axis=-1)
+        ok = live & ~bad
+        next_tok = jnp.where(ok, next_tok, st.tokens)
         # pin cache positions of done/empty slots (their KV write lands one
         # past the valid prefix and is overwritten before it could be read)
         new_cache = new_cache._replace(
             pos=jnp.where(live, new_cache.pos, cache.pos))
-        generated = st.generated + live.astype(jnp.int32)
+        generated = st.generated + ok.astype(jnp.int32)
         live_f = live.astype(jnp.float32)
         st = st._replace(
             tokens=next_tok,
-            done=st.done | (generated >= st.budget),
+            done=st.done | (generated >= st.budget) | bad,
             generated=generated,
             rng=new_rng,
             exit_cnt=st.exit_cnt + jnp.sum(exited.astype(jnp.float32) * live_f),
             gated_layers=st.gated_layers + jnp.sum(gated_frac * live_f),
-            live_cnt=st.live_cnt + jnp.sum(live_f))
+            live_cnt=st.live_cnt + jnp.sum(live_f),
+            quarantined=st.quarantined | bad)
         return (new_cache, st), next_tok
 
     def decode_chunk(params, cache: lm.LMCache, st: DecodeState):
@@ -539,6 +558,17 @@ class SlotEngine:
         # it before reuse, so a stale handle can never alias a donated
         # cache.
         self.resident = None
+        # optional chaos hook (serve/faults.py FaultInjector): consulted at
+        # the Python entry of every jitted hot-path call — BEFORE dispatch,
+        # so a raised fault never leaves a donated buffer half-consumed
+        self.injector = None
+        # page-granular snapshots cover attention KV only; recurrent mixer
+        # states are slot-indexed (not paged), so hybrid archs snapshot the
+        # full cache instead
+        self._page_snapshot_ok = all(
+            cfg.layer_spec(i).mixer == "attn"
+            for i in range(cfg.first_k_dense)) and all(
+            b.mixer == "attn" for b in cfg.block_pattern)
         self._sampler = make_sampler(temperature, top_k, top_p)
         # prefix layers inherit their mixer from the pattern, so all-attn
         # patterns are pad-safe end to end; recurrent mixers are not, and
@@ -646,6 +676,12 @@ class SlotEngine:
             kw = dict(out_shardings=(cache_sh, state_sh))
         return jax.jit(self._traced(self._init_fn()), **kw)()
 
+    # -- chaos injection ---------------------------------------------------
+
+    def _check_fault(self, site: str) -> None:
+        if self.injector is not None:
+            self.injector.check(site)
+
     # -- admission ---------------------------------------------------------
 
     def _bucket(self, t: int) -> int:
@@ -670,6 +706,7 @@ class SlotEngine:
         ``seed``: optional per-request sample seed (replayable sampling
         independent of slot placement; ignored by greedy engines).
         Returns (cache, st, first_token)."""
+        self._check_fault("prefill")
         prompt = jnp.asarray(prompt, jnp.int32)
         t = int(prompt.shape[0])
         assert t + max_new <= self.max_len, (t, max_new, self.max_len)
@@ -734,6 +771,7 @@ class SlotEngine:
         of the COW page ``region_ids[0]``). ``row`` is the slot's complete
         host mirror page-table row. One trace per (suffix bucket, pow2
         prefix cap). Returns (cache, st, first_token)."""
+        self._check_fault("prefill")
         assert self.paged and self.shared_prefill_ok
         prompt = jnp.asarray(prompt, jnp.int32)
         t = int(prompt.shape[0])
@@ -792,6 +830,7 @@ class SlotEngine:
         slot's resident pages ``prefix_ids`` and written into the next
         ``region_ids``. ``row`` is the slot's complete mirror page-table
         row. One trace per (C, pow2 prefix cap). Returns the cache."""
+        self._check_fault("prefill")
         assert self.paged and self.shared_prefill_ok
         chunk_tokens = jnp.asarray(chunk_tokens, jnp.int32)
         c_len = int(chunk_tokens.shape[0])
@@ -849,6 +888,7 @@ class SlotEngine:
         shared across page counts; the pad blocks ride along (their bytes
         are garbage and are re-written to scratch on restore). Output
         shardings are inferred from the committed cache."""
+        self._check_fault("swap")
         assert self.paged
         pids = self._pad_pow2(page_ids)
         cap = len(pids)
@@ -890,7 +930,8 @@ class SlotEngine:
                     generated=st.generated.at[slot].set(0),
                     budget=st.budget.at[slot].set(budget),
                     rng=st.rng.at[slot].set(
-                        jnp.where(has_rng, rng_row, st.rng[slot])))
+                        jnp.where(has_rng, rng_row, st.rng[slot])),
+                    quarantined=st.quarantined.at[slot].set(False))
                 cache = cache._replace(pos=cache.pos.at[slot].set(pos))
                 return cache, st
             kw = {}
@@ -943,6 +984,96 @@ class SlotEngine:
             t = jax.device_put(t, NamedSharding(self.mesh, P(None, None)))
         return cache._replace(page_table=t)
 
+    def scrub_slot_kv(self, cache, slot: int, page_ids=None):
+        """Zero a QUARANTINED slot's attention KV before its pages / row
+        are recycled. Retired pages normally return to the free list
+        unzeroed — junk is masked at read time — but NaN junk SURVIVES
+        masking: the softmax mixes values with exactly-zero weights and
+        ``0 * NaN = NaN``, so a later occupant of the page would go
+        non-finite too. Rare path (one call per quarantined request)."""
+        paged_types = (attn.PagedKVCache, attn.PagedMLACache)
+        contig_types = (attn.KVCache, attn.MLACache)
+        if self.paged:
+            pids = jnp.asarray(list(page_ids or ()), jnp.int32)
+            if pids.size == 0:
+                return cache
+
+            def hit(state, stacked):
+                if isinstance(state, paged_types):
+                    if stacked:                     # [n_sb, P, ...]
+                        return type(state)(*(a.at[:, pids].set(0)
+                                             for a in state))
+                    return type(state)(*(a.at[pids].set(0) for a in state))
+                return state
+        else:
+            def hit(state, stacked):
+                if isinstance(state, contig_types):
+                    if stacked:                     # [n_sb, B, ...]
+                        return type(state)(*(a.at[:, slot].set(0)
+                                             for a in state))
+                    return type(state)(*(a.at[slot].set(0) for a in state))
+                return state
+
+        return cache._replace(
+            prefix=tuple(hit(c, False) for c in cache.prefix),
+            slots=tuple(hit(c, True) for c in cache.slots))
+
+    # -- snapshot / restore ------------------------------------------------
+
+    def snapshot(self, cache, st: DecodeState, alloc=None) -> dict:
+        """Capture the device half of a serve stream host-side: the full
+        DecodeState (per-slot rng rows included) plus the attention KV.
+
+        Paged all-attention engines gather ONLY the allocated pool pages
+        (``alloc.refcnt`` keys — slot-owned and index-retained alike),
+        reusing the pow2-padded swap gather, in groups of ``max_pages`` so
+        every group shares the host-swap traces. Everything else (contiguous
+        rows, recurrent mixer states, hybrid paged caches) falls back to a
+        full ``device_get`` of the cache. The result is pure host data —
+        restorable any number of times.
+        """
+        state_np = jax.device_get(st)
+        if self.paged and alloc is not None and self._page_snapshot_ok:
+            pids = sorted(alloc.refcnt)
+            groups = [pids[i:i + self.max_pages]
+                      for i in range(0, len(pids), self.max_pages)]
+            return {"kind": "paged", "state": state_np,
+                    "pos": np.asarray(jax.device_get(cache.pos)),
+                    "pages": [(g, self.fetch_pages(cache, g))
+                              for g in groups]}
+        return {"kind": "full", "state": state_np,
+                "cache": jax.device_get(cache)}
+
+    def restore(self, snap: dict, alloc=None):
+        """Rebuild fresh (cache, DecodeState) device buffers from a
+        :meth:`snapshot` — every array the decode chunk can read is
+        bitwise the captured one, so the resumed stream replays the
+        uninterrupted run's tokens exactly (greedy AND sampled: the rng
+        rows come back too). Compiled traces are untouched; only buffers
+        are recreated, so a restore never re-traces."""
+        st = self._put_state(snap["state"])
+        if snap["kind"] == "paged":
+            assert alloc is not None, "paged restore needs the allocator"
+            cache, _ = self.init_state()
+            for group, blocks in snap["pages"]:
+                cache = self.restore_pages(cache, group, blocks)
+            cache = self.set_page_table(cache, alloc.table)
+            pos = jnp.asarray(snap["pos"], jnp.int32)
+            if self._shardings is not None:
+                pos = jax.device_put(pos, self._shardings[1].pos)
+            cache = cache._replace(pos=pos)
+        else:
+            cache = jax.tree_util.tree_map(jnp.asarray, snap["cache"])
+            if self._shardings is not None:
+                cache = jax.device_put(cache, self._shardings[1])
+        return cache, st
+
+    def _put_state(self, state_np) -> DecodeState:
+        st = DecodeState(*(jnp.asarray(x) for x in state_np))
+        if self._shardings is not None:
+            st = jax.device_put(st, self._shardings[2])
+        return st
+
     def kv_bytes(self, cache=None) -> int:
         """Total bytes of attention KV storage (pools or contiguous rows).
 
@@ -965,6 +1096,7 @@ class SlotEngine:
 
     def decode(self, params, cache, st):
         """Run one jitted chunk. Returns (cache, st, tokens [S, chunk])."""
+        self._check_fault("decode")
         self.decode_calls += 1
         return self._decode(params, cache, st)
 

@@ -1,0 +1,226 @@
+"""Deterministic chaos injection for the serving layer.
+
+X-HEEP's always-on domain survives accelerator faults because faults are
+*expected*: the host can power-cycle an accelerator and carry on. FEMU's
+contribution on top is that fault handling is only trustworthy when faults
+are *reproducible* — an emulation harness that fires the same fault at the
+same cycle every run. This module is the serving analogue of both: a
+seeded :class:`FaultInjector` with NAMED INJECTION SITES threaded through
+the serve hot path, so every failure mode the supervisor
+(``serve/resilient.py``) must survive can be triggered deterministically
+in tests, benchmarks and CI.
+
+Sites (see :data:`SITES`):
+
+* ``prefill``    — entry of every jitted admission (``prefill_into``,
+  ``prefill_into_shared``, ``prefill_chunk``): a crashed prompt ingest;
+* ``decode``     — entry of the jitted decode chunk: a crashed decode step;
+* ``page_alloc`` — inside ``PageAllocator._pop_free``: host allocator
+  failure mid-admission or mid-growth (deliberately fires with the
+  allocator half-mutated — restore must rebuild it from the snapshot);
+* ``swap``       — entry of ``SlotEngine.fetch_pages``: a failed
+  device->host page gather (hit by both the overload swap-out path and
+  the snapshot machinery itself);
+* ``backend``    — inside a dispatched XAIF backend call, at trace time
+  (the ``chaos`` backends below): a kernel that raises on launch, the
+  case the ``core/xaif.py`` circuit breaker degrades around.
+
+Faults are addressed by PER-SITE CALL INDEX: ``schedule={"decode": [3]}``
+raises on the 4th decode chunk of the stream, every run. Call counters
+are GLOBAL ACROSS RESTARTS (the injector outlives the crash), so a
+scheduled fault fires exactly once and the replayed calls after a restore
+do not re-trigger it. ``rates`` adds seeded Bernoulli faults — the
+decision is a pure function of (seed, site, call index), so a chaos
+benchmark sweep is reproducible end to end.
+
+Every fired fault is recorded as a :class:`repro.dist.fault.FaultEvent` —
+the SAME event type the training supervisor logs — so one post-mortem
+format covers both layers.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterable, List, Mapping, Optional
+
+import numpy as np
+
+from repro.dist.fault import FaultEvent
+
+SITES = ("prefill", "decode", "page_alloc", "swap", "backend")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by :meth:`FaultInjector.check` at an armed site."""
+
+    def __init__(self, site: str, index: int):
+        super().__init__(f"injected fault at site {site!r} call #{index}")
+        self.site = site
+        self.index = index
+
+
+class FaultInjector:
+    """Deterministic, seeded fault source for the serve hot path.
+
+    ``schedule``: {site: iterable of 0-based call indices} — exact firing
+    points. ``rates``: {site: probability} — seeded Bernoulli per call,
+    decided by ``(seed, site, index)`` alone. ``stalls``: {site: {index:
+    seconds}} — instead of raising, ``check`` SLEEPS (the watchdog's test
+    vector: the chunk completes, but too late). ``max_faults`` bounds the
+    total raised faults so a rate sweep cannot starve a stream forever.
+
+    The injector is long-lived: the supervisor keeps it across restarts,
+    so the per-site counters keep advancing and a consumed fault never
+    re-fires during replay.
+    """
+
+    def __init__(self, schedule: Optional[Mapping[str, Iterable[int]]] = None,
+                 rates: Optional[Mapping[str, float]] = None,
+                 stalls: Optional[Mapping[str, Mapping[str, float]]] = None,
+                 seed: int = 0, max_faults: Optional[int] = None,
+                 events: Optional[List[FaultEvent]] = None):
+        def _check_sites(m):
+            for site in (m or ()):
+                assert site in SITES, \
+                    f"unknown fault site {site!r}; sites: {SITES}"
+        _check_sites(schedule)
+        _check_sites(rates)
+        _check_sites(stalls)
+        self.schedule = {s: frozenset(int(i) for i in idx)
+                         for s, idx in dict(schedule or {}).items()}
+        self.rates = {s: float(p) for s, p in dict(rates or {}).items()}
+        self.stalls = {s: {int(i): float(d) for i, d in dict(m).items()}
+                       for s, m in dict(stalls or {}).items()}
+        self.seed = seed
+        self.max_faults = max_faults
+        self.calls: Dict[str, int] = {s: 0 for s in SITES}
+        self.fired = 0
+        self.stalled = 0
+        self.events: List[FaultEvent] = events if events is not None else []
+
+    def _bernoulli(self, site: str, index: int) -> bool:
+        p = self.rates.get(site, 0.0)
+        if p <= 0.0:
+            return False
+        # pure function of (seed, site, index): replayable no matter how
+        # the stream interleaves sites between runs
+        rng = np.random.default_rng(
+            [self.seed, SITES.index(site), index])
+        return bool(rng.random() < p)
+
+    def check(self, site: str) -> None:
+        """Count one call at ``site``; stall or raise if armed for it."""
+        assert site in SITES, site
+        index = self.calls[site]
+        self.calls[site] = index + 1
+        stall = self.stalls.get(site, {}).get(index)
+        if stall is not None:
+            self.stalled += 1
+            self.events.append(FaultEvent(
+                "inject-stall", index, f"site={site} sleep={stall:.3f}s"))
+            time.sleep(stall)
+            return
+        fire = (index in self.schedule.get(site, ())
+                or self._bernoulli(site, index))
+        if fire and (self.max_faults is None
+                     or self.fired < self.max_faults):
+            self.fired += 1
+            self.events.append(FaultEvent(
+                "inject", index, f"site={site} call={index}"))
+            raise InjectedFault(site, index)
+
+
+# ---------------------------------------------------------------------------
+# Arming: one process-wide active injector, consulted by call sites that
+# have no natural reference to the engine (the chaos XAIF backends).
+# ---------------------------------------------------------------------------
+
+_ARMED: Optional[FaultInjector] = None
+
+
+def arm(injector: Optional[FaultInjector]) -> Optional[FaultInjector]:
+    """Install ``injector`` as the process-wide armed injector (None to
+    disarm). Returns the previously armed one, so callers can restore it."""
+    global _ARMED
+    prev, _ARMED = _ARMED, injector
+    return prev
+
+
+def armed() -> Optional[FaultInjector]:
+    return _ARMED
+
+
+# ---------------------------------------------------------------------------
+# Chaos backends: per-op XAIF backends that DELEGATE to ref but consult the
+# armed injector's "backend" site first. Because the delegate IS ref, the
+# circuit breaker's fallback (chaos -> ref) is bitwise token-identical by
+# construction — the property the breaker tests assert.
+# ---------------------------------------------------------------------------
+
+
+def register_chaos_backends(ops: Iterable[str] = ("rmsnorm", "gemm")):
+    """Register a ``chaos`` backend for each op in ``ops`` (idempotent).
+    Returns the ops a backend was registered (or already present) for."""
+    from repro.core import xaif
+    out = []
+    for op in ops:
+        if "chaos" in xaif.backends_for(op):
+            out.append(op)
+            continue
+        ref = xaif.get_entry(op, "ref")
+
+        def _chaos(*args, _ref_fn=ref.fn, **kwargs):
+            inj = armed()
+            if inj is not None:
+                inj.check("backend")
+            return _ref_fn(*args, **kwargs)
+
+        xaif.register(op, "chaos",
+                      description="ref + injected trace-time faults")(_chaos)
+        out.append(op)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# KV poisoning: the NaN-guard test vector — a corrupted resident page.
+# ---------------------------------------------------------------------------
+
+
+def poison_slot(engine, cache, slot: int, alloc=None):
+    """Overwrite ``slot``'s resident attention KV with NaN — the
+    "corrupted page" fault the decode-scan NaN guard must quarantine.
+
+    Paged engines poison the slot's FIRST owned pool page (``alloc``
+    required); contiguous engines poison the slot's KV row. Only the
+    poisoned slot's logits go non-finite: batch elements never read each
+    other's pages/rows, so co-batched requests are unaffected. Returns the
+    modified cache (host-side ``.at[].set`` — call between chunks only).
+    """
+    from repro.models import attention as attn
+    nan = float("nan")
+    paged_types = (attn.PagedKVCache, attn.PagedMLACache)
+    contig_types = (attn.KVCache, attn.MLACache)
+
+    if engine.paged:
+        assert alloc is not None and alloc.owned.get(slot), \
+            "paged poisoning needs the slot's page ids"
+        pid = int(alloc.owned[slot][0])
+
+        def hit(state, stacked):
+            if isinstance(state, paged_types):
+                if stacked:                     # [n_sb, P, ...]
+                    return type(state)(*(a.at[:, pid].set(nan)
+                                         for a in state))
+                return type(state)(*(a.at[pid].set(nan) for a in state))
+            return state
+    else:
+        def hit(state, stacked):
+            if isinstance(state, contig_types):
+                if stacked:                     # [n_sb, B, ...]
+                    return type(state)(*(a.at[:, slot].set(nan)
+                                         for a in state))
+                return type(state)(*(a.at[slot].set(nan) for a in state))
+            return state
+
+    return cache._replace(
+        prefix=tuple(hit(c, False) for c in cache.prefix),
+        slots=tuple(hit(c, True) for c in cache.slots))

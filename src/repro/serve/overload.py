@@ -57,8 +57,10 @@ import jax
 import numpy as np
 
 from repro.serve.paging import PoolExhausted
-from repro.serve.scheduler import (ADMITTED, FULL, REJECTED, Request,
-                                   SlotScheduler)
+from repro.serve.scheduler import (ADMITTED, FULL, REASON_DEADLINE,
+                                   REASON_SHED, REASON_TOO_LONG, REASON_TTFT,
+                                   REJECTED, Request, SlotScheduler,
+                                   reject_reason)
 
 
 @dataclass(frozen=True)
@@ -197,8 +199,9 @@ class OverloadScheduler(SlotScheduler):
             for req in [r for r in waiting
                         if r.slo_ttft_ms is not None
                         and (now - r.arrival) * 1e3 > r.slo_ttft_ms]:
-                req.reject_reason = (
-                    f"shed: TTFT SLO {req.slo_ttft_ms:.0f} ms already "
+                req.reject_reason = reject_reason(
+                    REASON_TTFT,
+                    f"TTFT SLO {req.slo_ttft_ms:.0f} ms already "
                     f"missed after {(now - req.arrival) * 1e3:.0f} ms "
                     f"in queue")
                 waiting.remove(req)
@@ -212,8 +215,9 @@ class OverloadScheduler(SlotScheduler):
                 return est * 1e3 > req.deadline_ms
             for req in [r for r in waiting
                         if infeasible(r, r.max_new_tokens)]:
-                req.reject_reason = (
-                    f"shed: deadline {req.deadline_ms:.0f} ms infeasible "
+                req.reject_reason = reject_reason(
+                    REASON_DEADLINE,
+                    f"deadline {req.deadline_ms:.0f} ms infeasible "
                     f"({req.max_new_tokens} tokens to go at "
                     f"{self._tok_s * 1e3:.1f} ms/token)")
                 waiting.remove(req)
@@ -221,8 +225,9 @@ class OverloadScheduler(SlotScheduler):
                 progressed = True
             for ent in [e for e in self.requeued
                         if infeasible(e.req, e.remaining)]:
-                ent.req.reject_reason = (
-                    f"shed: deadline {ent.req.deadline_ms:.0f} ms "
+                ent.req.reject_reason = reject_reason(
+                    REASON_DEADLINE,
+                    f"deadline {ent.req.deadline_ms:.0f} ms "
                     f"infeasible after preemption ({ent.remaining} tokens "
                     f"to go at {self._tok_s * 1e3:.1f} ms/token)")
                 self.requeued.remove(ent)
@@ -255,8 +260,9 @@ class OverloadScheduler(SlotScheduler):
             if res == FULL and not self.occupant and not self.prefilling \
                     and self.free:
                 # an idle batch offers maximal pages: FULL here is forever
-                req.reject_reason = ("unservable: needs more pages than "
-                                     "an idle pool can provide")
+                req.reject_reason = reject_reason(
+                    REASON_SHED, "unservable: needs more pages than "
+                    "an idle pool can provide")
                 res = REJECTED
             if res != FULL:
                 if ent is None:
@@ -320,7 +326,8 @@ class OverloadScheduler(SlotScheduler):
     def _start_chunked(self, req: Request, now: float, t: int) -> str:
         C = self.cfg.prefill_chunk
         if t + req.max_new_tokens > self.engine.max_len:
-            req.reject_reason = (
+            req.reject_reason = reject_reason(
+                REASON_TOO_LONG,
                 f"prompt ({t}) + max_new_tokens ({req.max_new_tokens}) "
                 f"exceeds engine max_len ({self.engine.max_len})")
             return REJECTED

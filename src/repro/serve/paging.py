@@ -53,6 +53,7 @@ retryable after pages are freed.
 """
 from __future__ import annotations
 
+import copy
 from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -222,6 +223,25 @@ class PageAllocator:
         self.dirty = False                              # mirror vs device
         self.peak_pages = 0                             # high-water mark
         self.index = PrefixIndex(page_size) if sharing else None
+        # optional chaos hook (serve/faults.py): fires the "page_alloc"
+        # site inside _pop_free — i.e. possibly mid-admission with the
+        # allocator half-mutated, which is exactly the state a snapshot
+        # restore must be able to throw away
+        self.injector = None
+
+    def clone(self) -> "PageAllocator":
+        """Deep copy of every allocation structure (free list, ownership,
+        refcounts, mirror table, prefix trie) for snapshot/restore. The
+        live injector is SHARED, not copied — its per-site call counters
+        must keep advancing across restores so a consumed scheduled fault
+        never re-fires during replay."""
+        inj, self.injector = self.injector, None
+        try:
+            dup = copy.deepcopy(self)
+        finally:
+            self.injector = inj
+        dup.injector = inj
+        return dup
 
     # -- refcounts -----------------------------------------------------------
 
@@ -240,6 +260,8 @@ class PageAllocator:
         """Pop a free page, evicting LRU index-only pages if the free list
         ran dry — covered by ``available``'s reclaimable term, so a pop
         guarded by ``can_admit``/``reserved`` can never fail."""
+        if self.injector is not None:
+            self.injector.check("page_alloc")
         while not self.free:
             freed = (self.index.evict_one(self)
                      if self.index is not None else None)

@@ -1,0 +1,257 @@
+"""Fault-tolerant serving supervisor: snapshot, restore, deterministic replay.
+
+The serving analogue of ``dist.fault.run_with_restarts`` — and of X-HEEP's
+always-on power/reset domain: the supervisor owns the stream lifecycle, the
+scheduler+engine are the "accelerator" that may crash, and recovery never
+loses an in-flight request. Every ``snapshot_every`` chunks the supervisor
+captures a :class:`StreamSnapshot`:
+
+* the DEVICE half via :meth:`SlotEngine.snapshot` — full DecodeState
+  (per-slot rng rows included) plus the attention KV (allocated pool pages
+  through the padded host-swap gather, or the whole cache for contiguous /
+  hybrid engines);
+* the HOST half — allocator clone, free list, slot->request maps, the
+  per-request progress (token/itl list lengths and lifecycle stamps), queue
+  order and engine counters.
+
+On ANY exception out of a serve step (an injected fault, a watchdog
+timeout, a real crash) the supervisor restores the snapshot and re-drives
+the loop. Because the device state comes back bitwise and request progress
+is rolled back by truncation, the replayed chunks recompute exactly the
+tokens the uninterrupted run would have produced — greedy AND seeded
+sampling — which the kill-and-resume matrix asserts per injection site.
+
+Guard rails riding along:
+
+* WATCHDOG — a chunk slower than ``watchdog_ms`` wall-clock raises
+  :class:`WatchdogTimeout`, handled like any crash (bounded retries +
+  optional backoff). The injector's ``stalls`` are its test vector.
+* NaN QUARANTINE — handled below the supervisor (decode scan + scheduler):
+  a poisoned slot is shed with ``reject_reason`` ``nan-quarantined``;
+  co-batched requests never notice.
+* CIRCUIT BREAKER — pass ``breaker`` to install a
+  :class:`repro.core.xaif.CircuitBreaker` for the stream: a tuned backend
+  raising at call time degrades its (op, bucket) cell to ``ref`` instead
+  of crashing the stream at all.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.serve import faults as faults_mod
+from repro.serve.engine import SlotEngine
+from repro.serve.scheduler import (REASON_SHED, Request, ServeReport,
+                                   SlotScheduler, reject_reason)
+
+
+class WatchdogTimeout(RuntimeError):
+    """A serve chunk exceeded the per-chunk watchdog budget."""
+
+
+# per-request rollback record: list LENGTHS (tokens/itl only ever grow
+# between a snapshot and a fault, so truncation restore is exact) plus the
+# lifecycle scalars
+_ReqState = Tuple[int, int, Optional[float], Optional[float],
+                  Optional[float], Optional[str], int]
+
+
+def _req_state(r: Request) -> _ReqState:
+    return (len(r.tokens), len(r.itl), r.t_admitted, r.t_first_token,
+            r.t_finished, r.reject_reason, r.preemptions)
+
+
+def _rollback_req(r: Request, s: _ReqState) -> None:
+    ntok, nitl, t_adm, t_ft, t_fin, reason, preempt = s
+    del r.tokens[ntok:]
+    del r.itl[nitl:]
+    r.t_admitted, r.t_first_token, r.t_finished = t_adm, t_ft, t_fin
+    r.reject_reason, r.preemptions = reason, preempt
+
+
+@dataclass
+class StreamSnapshot:
+    """Everything needed to rebuild a serve stream at a chunk boundary."""
+
+    device: dict                          # SlotEngine.snapshot() result
+    alloc: Optional[object]               # PageAllocator clone (or None)
+    free: Tuple[int, ...]
+    occupant: Dict[int, int]              # slot -> rid
+    gen_seen: Dict[int, int]
+    true_len: Dict[int, int]
+    budget: Dict[int, int]
+    t_last: Dict[int, float]
+    max_concurrency: int
+    shared_tokens: int
+    shared_admissions: int
+    prefill_tokens: int                   # engine cumulative counter
+    decode_tokens: int                    # stream counter at the boundary
+    waiting: Tuple[int, ...]              # rids, queue order
+    req_state: Dict[int, _ReqState]       # rid -> rollback record
+
+
+def _take_snapshot(engine: SlotEngine, sched: SlotScheduler,
+                   waiting: deque, requests: List[Request],
+                   decode_tokens: int) -> StreamSnapshot:
+    return StreamSnapshot(
+        device=engine.snapshot(sched.cache, sched.state, sched.alloc),
+        alloc=sched.alloc.clone() if sched.alloc is not None else None,
+        free=tuple(sched.free),
+        occupant={slot: req.rid for slot, req in sched.occupant.items()},
+        gen_seen=dict(sched._gen_seen),
+        true_len=dict(sched._true_len),
+        budget=dict(sched._budget),
+        t_last=dict(sched._t_last),
+        max_concurrency=sched.max_concurrency,
+        shared_tokens=sched.shared_tokens,
+        shared_admissions=sched.shared_admissions,
+        prefill_tokens=engine.prefill_tokens,
+        decode_tokens=decode_tokens,
+        waiting=tuple(r.rid for r in waiting),
+        req_state={r.rid: _req_state(r) for r in requests})
+
+
+def _restore_snapshot(engine: SlotEngine, sched: SlotScheduler,
+                      snap: StreamSnapshot, requests: List[Request]
+                      ) -> Tuple[deque, int]:
+    """Overwrite ``sched`` in place from ``snap``; returns the rebuilt
+    waiting queue and the stream decode-token counter."""
+    by_rid = {r.rid: r for r in requests}
+    alloc = None
+    if snap.alloc is not None:
+        # clone of the stored clone: the snapshot stays pristine, so a
+        # second fault can restore from it again
+        alloc = snap.alloc.clone()
+        alloc.injector = engine.injector
+    sched.cache, sched.state = engine.restore(snap.device, alloc)
+    if alloc is not None and snap.device["kind"] == "paged":
+        alloc.dirty = False           # restore() pushed the table already
+    sched.alloc = alloc
+    sched.free = deque(snap.free)
+    sched.occupant = {slot: by_rid[rid]
+                      for slot, rid in snap.occupant.items()}
+    sched._gen_seen = dict(snap.gen_seen)
+    sched._true_len = dict(snap.true_len)
+    sched._budget = dict(snap.budget)
+    sched._t_last = dict(snap.t_last)
+    sched.max_concurrency = snap.max_concurrency
+    sched.shared_tokens = snap.shared_tokens
+    sched.shared_admissions = snap.shared_admissions
+    engine.prefill_tokens = snap.prefill_tokens
+    for r in requests:
+        _rollback_req(r, snap.req_state[r.rid])
+    return deque(by_rid[rid] for rid in snap.waiting), snap.decode_tokens
+
+
+def serve_resilient(engine: SlotEngine, params, requests: List[Request],
+                    realtime: bool = False, snapshot_every: int = 4,
+                    max_restarts: int = 8, watchdog_ms: Optional[float] = None,
+                    backoff_s: float = 0.0,
+                    injector: Optional["faults_mod.FaultInjector"] = None,
+                    breaker=None) -> ServeReport:
+    """Drive a request stream to completion under a restart supervisor.
+
+    Mirrors :func:`repro.serve.scheduler.serve` (base FIFO scheduler only —
+    overload control composes with its own swap machinery and is out of
+    scope here), adding snapshots every ``snapshot_every`` chunks and
+    crash recovery: any exception out of admission, decode or snapshotting
+    restores the latest snapshot and replays. ``injector`` is installed on
+    the engine (and armed process-wide for the chaos XAIF backends) for
+    the duration of the stream; ``breaker`` is installed as the process
+    circuit breaker. Extra keys land in ``report.stats``: ``restarts``,
+    ``faults_injected``, ``breaker_trips``, ``recovery_s_mean``/``_max``.
+    """
+    assert not engine.persistent_prefix_index, \
+        "serve_resilient owns the stream state; persistent pools unsupported"
+    assert snapshot_every >= 1 and max_restarts >= 0
+    waiting = deque(sorted(requests, key=lambda r: r.arrival))
+    t0 = time.perf_counter()
+
+    def now() -> float:
+        return time.perf_counter() - t0
+
+    prev_engine_inj = engine.injector
+    engine.injector = injector
+    prev_armed = faults_mod.arm(injector)
+    prev_breaker = None
+    if breaker is not None:
+        from repro.core import xaif
+        prev_breaker = xaif.install_breaker(breaker)
+    restarts = 0
+    recoveries: List[float] = []
+    decode_tokens = 0
+    chunk_i = 0
+    try:
+        sched = SlotScheduler(engine, params)
+        sched.clock = now
+        # initial snapshot: pristine stream (zero allocated pages, so the
+        # gather cannot fault) — the floor every recovery can fall back to
+        snap = _take_snapshot(engine, sched, waiting, requests,
+                              decode_tokens)
+        while waiting or sched.busy:
+            try:
+                progressed = sched.admission_round(waiting, now(), realtime)
+                if not sched.busy:
+                    if realtime and waiting:
+                        time.sleep(max(waiting[0].arrival - now(), 0.0))
+                        continue
+                    if not progressed:
+                        break
+                    continue
+                t_chunk = time.perf_counter()
+                decode_tokens += sched.step_chunk(now())
+                if watchdog_ms is not None:
+                    dt_ms = (time.perf_counter() - t_chunk) * 1e3
+                    if dt_ms > watchdog_ms:
+                        raise WatchdogTimeout(
+                            f"chunk took {dt_ms:.0f} ms "
+                            f"(budget {watchdog_ms:.0f} ms)")
+                chunk_i += 1
+                if chunk_i % snapshot_every == 0:
+                    # a fault DURING the gather lands in the handler below
+                    # and recovery falls back to the previous snapshot
+                    snap = _take_snapshot(engine, sched, waiting, requests,
+                                          decode_tokens)
+            except Exception as exc:   # noqa: BLE001 — supervisor catches all
+                if restarts >= max_restarts:
+                    raise
+                restarts += 1
+                if injector is not None:
+                    injector.events.append(faults_mod.FaultEvent(
+                        "restart", restarts,
+                        f"{type(exc).__name__}: {exc}"))
+                if backoff_s > 0.0:
+                    time.sleep(backoff_s)
+                t_rec = time.perf_counter()
+                waiting, decode_tokens = _restore_snapshot(
+                    engine, sched, snap, requests)
+                recoveries.append(time.perf_counter() - t_rec)
+        for req in waiting:
+            if req.reject_reason is None:
+                req.reject_reason = reject_reason(
+                    REASON_SHED, "unservable: needs more pages than an "
+                    "idle pool can provide")
+        wall = now()
+        total = decode_tokens + sum(1 for r in requests if r.tokens)
+        stats = SlotEngine.stats(sched.state)
+        stats["max_concurrency"] = float(sched.max_concurrency)
+        stats["prefill_tokens"] = float(engine.prefill_tokens)
+        if sched.alloc is not None:
+            stats["peak_pages"] = float(sched.alloc.peak_pages)
+        stats["restarts"] = float(restarts)
+        stats["faults_injected"] = float(injector.fired if injector else 0)
+        stats["breaker_trips"] = float(breaker.trips if breaker else 0)
+        if recoveries:
+            stats["recovery_s_mean"] = float(sum(recoveries)
+                                             / len(recoveries))
+            stats["recovery_s_max"] = float(max(recoveries))
+        return ServeReport(requests=requests, wall_s=wall,
+                           decode_tokens=total, stats=stats)
+    finally:
+        engine.injector = prev_engine_inj
+        faults_mod.arm(prev_armed)
+        if breaker is not None:
+            from repro.core import xaif
+            xaif.install_breaker(prev_breaker)

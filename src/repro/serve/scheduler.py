@@ -157,6 +157,24 @@ ADMITTED = "admitted"
 FULL = "full"          # retry when a slot / pages free up
 REJECTED = "rejected"  # can never be served by this engine
 
+# -- reject-reason codes ----------------------------------------------------
+# Every ``Request.reject_reason`` the stack sets is "<code>: <detail>" with
+# <code> one of REJECT_REASONS. Callers branch on the code prefix (or just
+# ``reason is None`` for served); the detail stays free-form for humans.
+REASON_SHED = "shed"              # load shedding / unservable by this pool
+REASON_DEADLINE = "deadline"      # completion deadline infeasible
+REASON_TTFT = "ttft-slo"          # first-token SLO already missed
+REASON_TOO_LONG = "too-long"      # prompt + budget exceeds engine max_len
+REASON_NAN = "nan-quarantined"    # non-finite logits: slot quarantined
+REJECT_REASONS = (REASON_SHED, REASON_DEADLINE, REASON_TTFT,
+                  REASON_TOO_LONG, REASON_NAN)
+
+
+def reject_reason(code: str, detail: str) -> str:
+    """Format a ``Request.reject_reason`` as ``"<code>: <detail>"``."""
+    assert code in REJECT_REASONS, code
+    return f"{code}: {detail}"
+
 
 class SlotScheduler:
     """Admission / retirement / backfill over a SlotEngine's slot batch."""
@@ -190,6 +208,9 @@ class SlotScheduler:
                     engine.num_pages, engine.capacity, engine.max_pages,
                     engine.page_size, sharing=engine.prefix_sharing,
                     optimistic=self._optimistic)
+        if self.alloc is not None:
+            # chaos: the engine's injector also covers host page allocation
+            self.alloc.injector = engine.injector
         self.free: deque = deque(range(engine.capacity))
         self.occupant: Dict[int, Request] = {}       # slot -> request
         self._gen_seen: Dict[int, int] = {}          # slot -> tokens recorded
@@ -220,7 +241,8 @@ class SlotScheduler:
         budget = req.max_new_tokens if budget is None else budget
         t = int(prompt.shape[0])
         if t + budget > self.engine.max_len:
-            req.reject_reason = (
+            req.reject_reason = reject_reason(
+                REASON_TOO_LONG,
                 f"prompt ({t}) + max_new_tokens ({budget}) "
                 f"exceeds engine max_len ({self.engine.max_len})")
             return REJECTED
@@ -347,15 +369,18 @@ class SlotScheduler:
                                                     self.alloc.table)
             self.alloc.dirty = False
 
-    def _retire(self, slot: int, req: Request, now: float) -> None:
-        """Return a finished slot to the pool (host bookkeeping only)."""
+    def _retire(self, slot: int, req: Request, now: float,
+                register: bool = True) -> None:
+        """Return a finished slot to the pool (host bookkeeping only).
+        ``register=False`` skips prefix indexing — quarantined slots hold
+        poisoned KV that must never be shared."""
         del self.occupant[slot]
         del self._gen_seen[slot]
         del self._true_len[slot]
         del self._budget[slot]
         self._t_last.pop(slot, None)
         if self.alloc is not None:
-            if self.alloc.index is not None:
+            if register and self.alloc.index is not None:
                 # index the retired chain so FUTURE requests can share it.
                 # KV is resident through position t + len(tokens) - 2 only
                 # (the final token was never fed back), hence tokens[:-1].
@@ -379,6 +404,7 @@ class SlotScheduler:
         toks_np = np.asarray(toks)
         gen_np = np.asarray(self.state.generated)
         done_np = np.asarray(self.state.done)
+        quar_np = np.asarray(self.state.quarantined)
         t_tok = self._now(now)
         produced = 0
         for slot, req in list(self.occupant.items()):
@@ -390,6 +416,27 @@ class SlotScheduler:
                 gap = max(t_tok - self._t_last.get(slot, t_tok), 0.0) / fresh
                 req.itl.extend([gap] * fresh)
                 self._t_last[slot] = t_tok
+            if quar_np[slot]:
+                # non-finite logits: the decode scan pinned this slot (no
+                # token was accepted past the poison) — shed ONLY this
+                # request; co-batched slots never read its KV, so their
+                # tokens are untouched. The poisoned pages/row are scrubbed
+                # before recycling (NaN survives read-time masking) and
+                # must not be indexed for sharing.
+                scrub = None
+                if self.alloc is not None:
+                    # exclusively-owned pages only: refcnt > 1 pages hold a
+                    # donor's prefix KV, which other slots still read
+                    scrub = [p for p in self.alloc.owned.get(slot, ())
+                             if self.alloc.refcnt.get(p) == 1]
+                self.cache = self.engine.scrub_slot_kv(self.cache, slot,
+                                                       scrub)
+                req.reject_reason = reject_reason(
+                    REASON_NAN, "non-finite logits: slot quarantined, "
+                    f"{len(req.tokens)} tokens salvaged")
+                req.t_finished = max(now, req.arrival)
+                self._retire(slot, req, now, register=False)
+                continue
             if req.stop_token is not None and req.stop_token in req.tokens:
                 # host-side early stop: truncate past the first stop token
                 # (inclusive) and retire — the decode scan may have run a
@@ -455,8 +502,9 @@ def serve(engine: SlotEngine, params, requests: List[Request],
     for req in waiting:
         # admission stalled with an idle batch: these can never be served
         if req.reject_reason is None:
-            req.reject_reason = ("unservable: needs more pages than an "
-                                 "idle pool can provide")
+            req.reject_reason = reject_reason(
+                REASON_SHED, "unservable: needs more pages than an "
+                "idle pool can provide")
     wall = now()
     # prefill-produced first tokens count toward throughput too
     total = decode_tokens + sum(1 for r in requests if r.tokens)

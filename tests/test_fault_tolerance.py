@@ -101,6 +101,33 @@ def test_supervisor_restart_after_injected_failure(tmp_path):
     assert int(state.opt.step) == 6
 
 
+def test_supervisor_lazy_init_called_once(tmp_path):
+    """Regression: run_with_restarts used to call init_fn() on EVERY
+    attempt and discard the result whenever a checkpoint existed. Init
+    must run at most once — restart attempts restore from the checkpoint
+    using the previous state as the pytree template."""
+    run = _tiny_run()
+    init_fn, step_fn = make_train_step(run)
+    jstep = jax.jit(step_fn)
+    calls = {"init": 0}
+
+    def counted_init():
+        calls["init"] += 1
+        return init_fn(jax.random.PRNGKey(0))
+
+    def sf(state, batch):
+        return jstep(state, {"inputs": jnp.asarray(batch["inputs"]),
+                             "labels": jnp.asarray(batch["labels"])})
+
+    loop = ResilientLoop(Checkpointer(str(tmp_path)), checkpoint_every=2)
+    state = run_with_restarts(
+        counted_init, sf, lambda start: _batches(run, start),
+        num_steps=6, loop=loop, inject_failure_at=4)
+    assert any(e.kind == "restart" for e in loop.events)
+    assert int(state.opt.step) == 6
+    assert calls["init"] == 1, calls["init"]
+
+
 def test_straggler_detection(tmp_path):
     loop = ResilientLoop(Checkpointer(str(tmp_path)), checkpoint_every=1000,
                          straggler_factor=5.0)

@@ -127,3 +127,23 @@ def test_attention_causality(seed):
     np.testing.assert_allclose(np.asarray(out1[:, :, :20]),
                                np.asarray(out2[:, :, :20]), rtol=1e-5,
                                atol=1e-5)
+
+
+# -- serving snapshot/restore (PR 8) ----------------------------------------
+# world is the module-scoped engine/params fixture from the resilient
+# serving suite; the case body is shared — hypothesis only drives the
+# (seed, snap_at, sharing) draw here.
+from hypothesis import HealthCheck                            # noqa: E402
+from test_resilient_serving import (_snapshot_restore_case,   # noqa: E402
+                                    world)                    # noqa: F401
+
+
+@given(seed=st.integers(0, 2**16), snap_at=st.integers(1, 6),
+       sharing=st.booleans())
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+def test_serve_snapshot_restore_equals_uninterrupted(world, seed, snap_at,
+                                                     sharing):
+    """Snapshot at ANY chunk boundary + restore into a fresh scheduler
+    == the uninterrupted run: tokens, rejections, allocator invariants."""
+    _snapshot_restore_case(world, seed, snap_at, sharing)

@@ -1,0 +1,426 @@
+"""Fault-tolerant serving: kill-and-resume token identity at every
+injection site, NaN quarantine surgicality, circuit-breaker degradation,
+watchdog recovery, snapshot/restore properties and the reject-reason
+contract.
+
+The correctness bar is the repo's standing one: a supervised stream that
+crashes (at any site, any number of bounded times) must complete 100% of
+requests with greedy AND per-request-seeded sampled tokens bitwise
+identical to the uninterrupted run — on the contiguous, paged and
+prefix-sharing engines alike.
+"""
+import dataclasses
+from collections import deque
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import (AccelConfig, RunConfig, SHAPES_BY_NAME,
+                                get_arch)
+from repro.core import xaif
+from repro.models import lm
+from repro.serve.engine import SlotEngine
+from repro.serve.faults import (FaultInjector, InjectedFault, arm, armed,
+                                poison_slot, register_chaos_backends)
+from repro.serve.overload import OverloadConfig
+from repro.serve.resilient import (_restore_snapshot, _take_snapshot,
+                                   serve_resilient)
+from repro.serve.scheduler import (REASON_NAN, REJECT_REASONS, Request,
+                                   SlotScheduler, reject_reason, serve)
+
+ACCEL = AccelConfig()
+
+ENGINE_KW = {
+    "contig": dict(paged=False),
+    "paged": dict(paged=True, page_size=8),
+    "prefix": dict(paged=True, page_size=8, prefix_sharing=True),
+}
+# host page allocation and the swap gather only exist on the paged path
+SITES_FOR = {
+    "contig": ("prefill", "decode"),
+    "paged": ("prefill", "decode", "page_alloc", "swap"),
+    "prefix": ("prefill", "decode", "page_alloc", "swap"),
+}
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = get_arch("chatglm3-6b").reduced()
+    run = RunConfig(arch=cfg, shape=SHAPES_BY_NAME["decode_32k"],
+                    accel=ACCEL)
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(11)
+    protos = []
+    for i in range(8):
+        t = int(rng.integers(4, 21))
+        protos.append(dict(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, (t,), dtype=np.int32),
+            max_new_tokens=int(rng.integers(6, 13))))
+
+    def requests(seeded=False):
+        out = [Request(**p) for p in protos]
+        if seeded:
+            for r in out:
+                r.seed = 100 + r.rid
+        return out
+
+    return dict(cfg=cfg, run=run, params=params, requests=requests)
+
+
+def _engine(world, kind, sampled=False, capacity=3, run=None, **kw):
+    return SlotEngine(run if run is not None else world["run"],
+                      capacity=capacity, max_len=64, chunk=4,
+                      temperature=0.8 if sampled else 0.0,
+                      top_k=8 if sampled else 0,
+                      **{**ENGINE_KW[kind], **kw})
+
+
+# ---------------------------------------------------------------------------
+# Kill-and-resume matrix: one fault at every applicable site, every engine,
+# greedy and seeded sampling — tokens must equal the fault-free run.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sampled", [False, True], ids=["greedy", "seeded"])
+@pytest.mark.parametrize("kind", ["contig", "paged", "prefix"])
+def test_kill_and_resume_token_identity(world, kind, sampled):
+    eng = _engine(world, kind, sampled)
+    ref = serve(eng, world["params"], world["requests"](seeded=sampled))
+    assert not ref.rejected
+    ref_toks = {r.rid: list(r.tokens) for r in ref.served}
+    for site in SITES_FOR[kind]:
+        inj = FaultInjector(schedule={site: [1]})
+        rep = serve_resilient(eng, world["params"],
+                              world["requests"](seeded=sampled),
+                              snapshot_every=2, injector=inj)
+        assert inj.fired >= 1, f"{site} fault never fired"
+        assert rep.stats["restarts"] >= 1, site
+        assert rep.completion_rate == 1.0, \
+            (site, [r.reject_reason for r in rep.rejected])
+        for r in rep.served:
+            assert list(r.tokens) == ref_toks[r.rid], (site, r.rid)
+        # the supervisor disarms the injector after the stream
+        assert eng.injector is None and armed() is None
+
+
+def test_kill_and_resume_backend_site(world):
+    """The dispatched-backend site: a chaos backend raising at trace time
+    kills the stream; the supervisor restores and the re-trace (injector
+    counter advanced) completes. chaos delegates to ref, so tokens match
+    an all-ref reference bitwise."""
+    register_chaos_backends()
+    ref_run = dataclasses.replace(world["run"],
+                                  accel=xaif.DispatchPolicy.make({}))
+    ref = serve(_engine(world, "contig", run=ref_run), world["params"],
+                world["requests"]())
+    ref_toks = {r.rid: list(r.tokens) for r in ref.served}
+    chaos_run = dataclasses.replace(
+        world["run"], accel=xaif.DispatchPolicy.make({"rmsnorm": "chaos"}))
+    for kind in ("contig", "paged"):
+        eng = _engine(world, kind, run=chaos_run)
+        inj = FaultInjector(schedule={"backend": [0]})
+        rep = serve_resilient(eng, world["params"], world["requests"](),
+                              snapshot_every=2, injector=inj)
+        assert inj.fired >= 1
+        assert rep.stats["restarts"] >= 1
+        assert rep.completion_rate == 1.0, kind
+        for r in rep.served:
+            assert list(r.tokens) == ref_toks[r.rid], (kind, r.rid)
+
+
+def test_repeated_faults_and_restart_budget(world):
+    """Several scheduled faults across sites in one stream: bounded
+    restarts absorb all of them; an exhausted budget re-raises."""
+    eng = _engine(world, "paged")
+    ref = serve(eng, world["params"], world["requests"]())
+    ref_toks = {r.rid: list(r.tokens) for r in ref.served}
+    inj = FaultInjector(schedule={"decode": [1, 3], "prefill": [4]})
+    rep = serve_resilient(eng, world["params"], world["requests"](),
+                          snapshot_every=2, injector=inj)
+    assert inj.fired == 3
+    assert rep.stats["restarts"] == 3
+    assert rep.completion_rate == 1.0
+    for r in rep.served:
+        assert list(r.tokens) == ref_toks[r.rid], r.rid
+    with pytest.raises(InjectedFault):
+        serve_resilient(eng, world["params"], world["requests"](),
+                        snapshot_every=2, max_restarts=0,
+                        injector=FaultInjector(schedule={"decode": [1]}))
+    assert eng.injector is None and armed() is None   # finally-cleanup ran
+
+
+def test_watchdog_stall_recovery(world):
+    """An injected stall (chunk completes, but too late) trips the
+    per-chunk watchdog; recovery replays from the snapshot and tokens
+    stay identical."""
+    eng = _engine(world, "contig")
+    ref = serve(eng, world["params"], world["requests"]())   # warm traces
+    ref_toks = {r.rid: list(r.tokens) for r in ref.served}
+    inj = FaultInjector(stalls={"decode": {2: 1.0}})
+    rep = serve_resilient(eng, world["params"], world["requests"](),
+                          snapshot_every=2, watchdog_ms=900.0,
+                          injector=inj)
+    assert inj.stalled == 1
+    assert rep.stats["restarts"] >= 1
+    assert rep.completion_rate == 1.0
+    for r in rep.served:
+        assert list(r.tokens) == ref_toks[r.rid], r.rid
+
+
+# ---------------------------------------------------------------------------
+# NaN quarantine: shed exactly the poisoned request, scrub its KV.
+# ---------------------------------------------------------------------------
+
+
+def _drain(sched, waiting):
+    while waiting or sched.busy:
+        progressed = sched.admission_round(waiting, 0.0, False)
+        if not sched.busy:
+            if not progressed:
+                break
+            continue
+        sched.step_chunk(0.0)
+
+
+@pytest.mark.parametrize("kind", ["contig", "paged"])
+def test_nan_quarantine_sheds_only_poisoned_request(world, kind):
+    eng = _engine(world, kind)
+    reqs_ref = [Request(rid=i, prompt=np.arange(5 + i, dtype=np.int32) + 1,
+                        max_new_tokens=10) for i in range(3)]
+    ref = serve(eng, world["params"], reqs_ref)
+    assert not ref.rejected
+    ref_toks = {r.rid: list(r.tokens) for r in ref.served}
+
+    reqs = [Request(rid=i, prompt=np.arange(5 + i, dtype=np.int32) + 1,
+                    max_new_tokens=10) for i in range(3)]
+    sched = SlotScheduler(eng, world["params"])
+    waiting = deque(reqs)
+    sched.admission_round(waiting, 0.0, False)
+    assert len(sched.occupant) == 3
+    victim_slot = 1
+    victim = sched.occupant[victim_slot]
+    sched.step_chunk(0.0)                      # a few clean tokens first
+    salvaged = len(victim.tokens)
+    sched.cache = poison_slot(eng, sched.cache, victim_slot, sched.alloc)
+    _drain(sched, waiting)
+
+    assert victim.reject_reason is not None
+    assert victim.reject_reason.startswith(REASON_NAN + ":")
+    assert len(victim.tokens) == salvaged      # nothing emitted past poison
+    for r in reqs:
+        if r is victim:
+            continue
+        assert r.reject_reason is None, r.reject_reason
+        assert list(r.tokens) == ref_toks[r.rid], r.rid
+
+
+def test_nan_quarantine_scrubs_pages_for_reuse(world):
+    """After a quarantine retire, the poisoned pages/slot go back into
+    circulation: later requests admitted into them must decode clean
+    (NaN would survive read-time masking — scrubbing is load-bearing)."""
+    eng = _engine(world, "paged")
+    protos = [dict(rid=i, prompt=np.arange(5 + (i % 3), dtype=np.int32) + 1,
+                   max_new_tokens=8) for i in range(6)]
+    ref = serve(eng, world["params"], [Request(**p) for p in protos])
+    assert not ref.rejected
+    ref_toks = {r.rid: list(r.tokens) for r in ref.served}
+
+    reqs = [Request(**p) for p in protos]
+    sched = SlotScheduler(eng, world["params"])
+    waiting = deque(reqs)
+    sched.admission_round(waiting, 0.0, False)   # fills capacity 3
+    victim = sched.occupant[0]
+    sched.step_chunk(0.0)
+    sched.cache = poison_slot(eng, sched.cache, 0, sched.alloc)
+    _drain(sched, waiting)                       # backfills into freed pages
+
+    quarantined = [r for r in reqs if r.reject_reason is not None]
+    assert quarantined == [victim], \
+        [(r.rid, r.reject_reason) for r in quarantined]
+    for r in reqs:
+        if r is not victim:
+            assert list(r.tokens) == ref_toks[r.rid], r.rid
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker: raising tuned backend -> pinned ref fallback, identical
+# tokens, no stream interruption.
+# ---------------------------------------------------------------------------
+
+
+def test_circuit_breaker_pins_cell_and_matches_ref(world):
+    register_chaos_backends()
+    ref_run = dataclasses.replace(world["run"],
+                                  accel=xaif.DispatchPolicy.make({}))
+    ref = serve(_engine(world, "contig", run=ref_run), world["params"],
+                world["requests"]())
+    ref_toks = {r.rid: list(r.tokens) for r in ref.served}
+
+    chaos_run = dataclasses.replace(
+        world["run"], accel=xaif.DispatchPolicy.make({"rmsnorm": "chaos"}))
+    eng = _engine(world, "contig", run=chaos_run)
+    inj = FaultInjector(schedule={"backend": [0]})
+    breaker = xaif.CircuitBreaker()
+    rep = serve_resilient(eng, world["params"], world["requests"](),
+                          injector=inj, breaker=breaker)
+    # the breaker absorbed the raise AT DISPATCH — no restart needed
+    assert rep.stats["restarts"] == 0
+    assert rep.completion_rate == 1.0
+    assert breaker.trips >= 1
+    assert any(op == "rmsnorm" for (op, _b) in breaker.pinned)
+    assert all(v == "ref" for v in breaker.pinned.values())
+    assert any(e.kind == "circuit-breaker" for e in breaker.events)
+    for r in rep.served:
+        assert list(r.tokens) == ref_toks[r.rid], r.rid
+    assert xaif.active_breaker() is None       # uninstalled after the stream
+
+
+def test_circuit_breaker_records_unified_fault_events():
+    """Breaker events are dist.fault.FaultEvent — one post-mortem format
+    across the training and serving supervisors."""
+    from repro.dist.fault import FaultEvent
+    b = xaif.CircuitBreaker()
+    b.trip("gemm", "rows_s", "pallas", RuntimeError("boom"))
+    assert b.pinned == {("gemm", "rows_s"): "ref"}
+    (ev,) = b.events
+    assert isinstance(ev, FaultEvent) and ev.kind == "circuit-breaker"
+    assert "gemm" in ev.info and "boom" in ev.info
+
+
+# ---------------------------------------------------------------------------
+# Injector unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_injector_determinism_and_bounds():
+    ev = []
+    a = FaultInjector(rates={"decode": 0.5}, seed=3, max_faults=2, events=ev)
+    b = FaultInjector(rates={"decode": 0.5}, seed=3, max_faults=2)
+    fires_a, fires_b = [], []
+    for i in range(40):
+        for inj, out in ((a, fires_a), (b, fires_b)):
+            try:
+                inj.check("decode")
+            except InjectedFault:
+                out.append(i)
+    assert fires_a == fires_b                  # pure f(seed, site, index)
+    assert len(fires_a) == 2                   # max_faults bound
+    assert a.fired == 2 and len(ev) == 2
+    assert a.calls["decode"] == 40
+    with pytest.raises(AssertionError):
+        FaultInjector(schedule={"nope": [0]})
+    # arm/disarm returns the previous injector
+    prev = arm(a)
+    try:
+        assert armed() is a
+    finally:
+        arm(prev)
+
+
+def test_reject_reasons_documented_and_exhaustive(world):
+    """Every reject_reason the stack emits is "<code>: <detail>" with a
+    documented code — asserted over real too-long/ttft/deadline shed paths
+    in one overloaded stream (shed-unservable and nan-quarantined are
+    produced by the quarantine tests above and the overload suite)."""
+    assert set(REJECT_REASONS) == {"shed", "deadline", "ttft-slo",
+                                   "too-long", "nan-quarantined"}
+    with pytest.raises(AssertionError):
+        reject_reason("not-a-code", "x")
+    eng = _engine(world, "paged", capacity=1, num_pages=9)
+    reqs = [
+        Request(rid=0, prompt=np.arange(60, dtype=np.int32) + 1,
+                max_new_tokens=8),                     # too-long
+        Request(rid=1, prompt=np.arange(6, dtype=np.int32) + 1,
+                max_new_tokens=8),                     # serves
+        Request(rid=2, prompt=np.arange(6, dtype=np.int32) + 1,
+                max_new_tokens=4, slo_ttft_ms=1e-3),   # ttft shed
+        Request(rid=3, prompt=np.arange(6, dtype=np.int32) + 1,
+                max_new_tokens=4, deadline_ms=1e-3),   # deadline shed
+    ]
+    rep = serve(eng, world["params"], reqs,
+                overload=OverloadConfig(mode="reject"))
+    reasons = [r.reject_reason for r in rep.rejected]
+    codes = set()
+    for reason in reasons + [reject_reason(REASON_NAN, "x")]:
+        code, sep, detail = reason.partition(": ")
+        assert sep and detail, reason
+        assert code in REJECT_REASONS, reason
+        codes.add(code)
+    assert {"too-long", "ttft-slo", "deadline",
+            "nan-quarantined"} <= codes, codes
+    # the legacy substrings callers grep for survive inside the details
+    assert any("max_len" in r for r in reasons)
+    assert any("TTFT SLO" in r for r in reasons)
+
+
+# ---------------------------------------------------------------------------
+# Snapshot/restore property: snapshot at a chunk boundary, restore into a
+# fresh scheduler, finish — equals the uninterrupted run, allocator
+# invariants intact. Paged and prefix-sharing, under backfill churn. The
+# case body is shared with the hypothesis version in test_properties.py
+# (which draws (seed, snap_at, sharing) at random when hypothesis is
+# installed); the fixed-boundary test below always runs.
+# ---------------------------------------------------------------------------
+
+from test_overload import _check_alloc_invariants    # noqa: E402
+
+_PROP_ENGINES = {}
+
+
+def _prop_engine(world, sharing):
+    kind = "prefix" if sharing else "paged"
+    if kind not in _PROP_ENGINES:
+        _PROP_ENGINES[kind] = _engine(world, kind)
+    return _PROP_ENGINES[kind]
+
+
+def _snapshot_restore_case(world, seed, snap_at, sharing):
+    eng = _prop_engine(world, sharing)
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, world["cfg"].vocab_size, (8,), dtype=np.int32)
+    reqs = []
+    for i in range(6):
+        t = int(rng.integers(3, 14))
+        p = rng.integers(0, world["cfg"].vocab_size, (t,), dtype=np.int32)
+        if sharing and rng.random() < 0.5:
+            p = np.concatenate([shared, p])    # radix hits + COW boundaries
+        reqs.append(Request(rid=i, prompt=p,
+                            max_new_tokens=int(rng.integers(4, 10))))
+
+    sched = SlotScheduler(eng, world["params"])
+    waiting = deque(reqs)
+    snap = None
+    chunks = decode_tokens = 0
+    while waiting or sched.busy:
+        progressed = sched.admission_round(waiting, 0.0, False)
+        if not sched.busy:
+            if not progressed:
+                break
+            continue
+        decode_tokens += sched.step_chunk(0.0)
+        chunks += 1
+        if chunks == snap_at:
+            snap = _take_snapshot(eng, sched, waiting, reqs, decode_tokens)
+    assert all(r.reject_reason is None for r in reqs)
+    ref_toks = {r.rid: list(r.tokens) for r in reqs}
+    if snap is None:                           # stream shorter than snap_at
+        return
+
+    sched2 = SlotScheduler(eng, world["params"])
+    waiting2, _ = _restore_snapshot(eng, sched2, snap, reqs)
+    _drain(sched2, waiting2)
+    for r in reqs:
+        assert r.reject_reason is None
+        assert list(r.tokens) == ref_toks[r.rid], r.rid
+    if not sharing:
+        # drained pool: every page free (or index-held), refcounts rebuilt
+        assert not sched2.alloc.owned and not sched2.alloc.reserved
+        _check_alloc_invariants(sched2.alloc, eng.capacity)
+
+
+def test_snapshot_restore_at_fixed_boundaries(world):
+    for seed, snap_at, sharing in ((0, 1, False), (1, 3, False),
+                                   (2, 2, True), (3, 4, True)):
+        _snapshot_restore_case(world, seed, snap_at, sharing)
