@@ -214,6 +214,43 @@ def _paged_attn_cell(np_pages: int, batch: int = 4, hq: int = 4,
     return build
 
 
+def _verify_decode_cell(s: int, batch: int = 4, hq: int = 4, hkv: int = 2,
+                        d: int = 32, k1: int = 5):
+    """One verify_decode cell: ``batch`` sequences scoring ``k1`` = k+1
+    speculative query tokens each against a contiguous [B, Hkv, s, D]
+    cache (query i admitted positions <= cache_pos + i)."""
+    def build(scale: int):
+        q = jax.random.normal(_key(0), (batch, hq, k1, d), jnp.float32)
+        k = jax.random.normal(_key(1), (batch, hkv, s, d), jnp.float32)
+        v = jax.random.normal(_key(2), (batch, hkv, s, d), jnp.float32)
+        pos = (jnp.arange(batch, dtype=jnp.int32) * (s // 4)
+               + s // 2) % (s - k1)
+        return (q, k, v, pos), {}
+    return build
+
+
+def _verify_paged_cell(np_pages: int, batch: int = 4, hq: int = 4,
+                       hkv: int = 2, d: int = 32, ps: int = 16,
+                       k1: int = 5):
+    """One verify_decode_paged cell: the paged sibling — ``k1`` query
+    tokens per sequence over a page pool with staggered lengths."""
+    def build(scale: int):
+        np_ = np_pages                    # bucket boundary is NP*ps; fixed
+        pool = batch * np_ + 1
+        q = jax.random.normal(_key(0), (batch, hq, k1, d), jnp.float32)
+        kp = jax.random.normal(_key(1), (pool, hkv, ps, d), jnp.float32)
+        vp = jax.random.normal(_key(2), (pool, hkv, ps, d), jnp.float32)
+        table = (1 + jnp.arange(batch)[:, None] * np_
+                 + jnp.arange(np_)[None, :]).astype(jnp.int32)
+        pos = (jnp.arange(batch, dtype=jnp.int32) * ps
+               + ps // 2) % (np_ * ps - k1)
+        n_alloc = (pos + k1 - 1) // ps + 1
+        table = jnp.where(jnp.arange(np_)[None, :] < n_alloc[:, None],
+                          table, -1)
+        return (q, kp, vp, table, pos), {}
+    return build
+
+
 def _moe_decode_cell(e: int, batch: int = 4, k: int = 2, d: int = 64,
                      h: int = 32):
     """One moe_decode cell: ``batch`` decode tokens routed top-``k`` over
@@ -269,6 +306,10 @@ CELLS: Dict[Tuple[str, str], Callable] = {
     ("attn_decode", "kv_l"): _attn_decode_cell(2048),
     ("attn_decode_paged", "kv_s"): _paged_attn_cell(8),     # 8*16  = 128 kv
     ("attn_decode_paged", "kv_l"): _paged_attn_cell(128),   # 128*16 = 2048
+    ("verify_decode", "kv_s"): _verify_decode_cell(128),
+    ("verify_decode", "kv_l"): _verify_decode_cell(2048),
+    ("verify_decode_paged", "kv_s"): _verify_paged_cell(8),
+    ("verify_decode_paged", "kv_l"): _verify_paged_cell(128),
     ("moe_decode", "e_s"): _moe_decode_cell(8),
     ("moe_decode", "e_l"): _moe_decode_cell(64),
 }
@@ -346,6 +387,12 @@ def arch_cells(cfg, *, capacity: int = 8, bucket_len: int = 64,
             np_, batch=rows_s, hq=hq, hkv=hkv, d=hd, ps=page_size)
         cells[("attn_decode", kv_bucket)] = _attn_decode_cell(
             kv_extent, batch=rows_s, hq=hq, hkv=hkv, d=hd)
+        # speculative verify runs the same geometry with a K1 query axis
+        # (spec decoding gates to the standard GQA path, so no MLA cell)
+        cells[("verify_decode", kv_bucket)] = _verify_decode_cell(
+            kv_extent, batch=rows_s, hq=hq, hkv=hkv, d=hd)
+        cells[("verify_decode_paged", kv_bucket)] = _verify_paged_cell(
+            np_, batch=rows_s, hq=hq, hkv=hkv, d=hd, ps=page_size)
     else:
         cells[("attn_decode_paged", kv_bucket)] = _paged_attn_cell(
             np_, batch=rows_s, hq=hq, hkv=1, d=cfg.mla.kv_lora_rank,
@@ -399,6 +446,12 @@ def _cost_args(op: str, shapes) -> Optional[tuple]:
         if op == "attn_decode_paged":
             q, kp, pt = shapes[0], shapes[1], shapes[3]
             return (q[0], q[1], pt[1], kp[2], q[2])
+        if op == "verify_decode":
+            q, ks = shapes[0], shapes[1]
+            return (q[0], q[1], q[2], ks[2], q[3])
+        if op == "verify_decode_paged":
+            q, kp, pt = shapes[0], shapes[1], shapes[3]
+            return (q[0], q[1], q[2], pt[1], kp[2], q[3])
         if op == "moe_decode":
             xs, ks, wg = shapes[0], shapes[1], shapes[3]
             return (xs[0], ks[1], wg[1], wg[2], wg[0])

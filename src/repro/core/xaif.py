@@ -192,6 +192,10 @@ _BUCKET_FNS: Dict[str, Callable] = {
     "ssm_decode": _ssm_decode_bucket,
     "attn_decode": _decode_kv_bucket,
     "attn_decode_paged": _paged_bucket,
+    # verify ops: q gains a K1 query axis but k / page_table sit at the
+    # same argument positions, so the decode bucket fns apply unchanged
+    "verify_decode": _decode_kv_bucket,
+    "verify_decode_paged": _paged_bucket,
     "moe_decode": _moe_bucket,
 }
 
@@ -204,6 +208,8 @@ _OP_BUCKETS: Dict[str, Tuple[str, ...]] = {
     "ssm_decode": ("mamba", "mlstm"),
     "attn_decode": ("kv_s", "kv_l"),
     "attn_decode_paged": ("kv_s", "kv_l"),
+    "verify_decode": ("kv_s", "kv_l"),
+    "verify_decode_paged": ("kv_s", "kv_l"),
     "moe_decode": ("e_s", "e_l"),
 }
 
@@ -560,4 +566,5 @@ def _ensure_builtin_backends():
     from repro.kernels.ssm_decode import ops as _ssm_dec_ops     # noqa: F401
     from repro.kernels.attn_decode import ops as _decode_ops     # noqa: F401
     from repro.kernels.paged_attention import ops as _paged_ops  # noqa: F401
+    from repro.kernels.verify_decode import ops as _verify_ops   # noqa: F401
     from repro.kernels.moe_decode import ops as _moe_ops         # noqa: F401

@@ -1,0 +1,89 @@
+"""Jit'd wrappers + XAIF registration for multi-token verify attention.
+
+The ``verify_decode`` / ``verify_decode_paged`` ops are the speculative-
+decoding verification contract: K1 = k+1 query tokens per sequence scored
+against the KV cache in one batched pass, query i admitted positions
+``<= cache_pos + i``. Positional signatures::
+
+    verify_decode(q [B, Hq, K1, D], k [B, Hkv, S, D], v [B, Hkv, S, Dv],
+                  cache_pos [B] i32)
+    verify_decode_paged(q [B, Hq, K1, D], k_pages [P, Hkv, ps, D],
+                        v_pages [P, Hkv, ps, Dv], page_table [B, NP] i32,
+                        cache_pos [B] i32)
+
+plus keyword-only ``scale``. Two backends each:
+
+* ``ref``    — K1 applications of the single-token decode refs at
+  ``cache_pos + i``; BITWISE-identical to sequential decode by
+  construction (greedy spec-decode token identity rests on it);
+* ``pallas`` — one online-softmax pass with a per-query staircase mask
+  (``bs`` tunable on the contiguous variant, page ids scalar-prefetched
+  on the paged one).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core import xaif
+from repro.kernels.verify_decode import ref as _ref
+from repro.kernels.verify_decode import verify_decode as _k
+
+
+def verify_decode_cost(b, hq, k1, s, d, dtype_bytes=2):
+    """Verification is bandwidth-bound on the cache like plain decode —
+    ONE pass over [B, S] K and V lanes now amortized over K1 queries."""
+    flops = 4.0 * b * hq * k1 * s * d
+    return {"flops": flops,
+            "hbm_bytes": dtype_bytes * b * (2 * s * d + 2 * hq * k1 * d)}
+
+
+def verify_decode_paged_cost(b, hq, k1, np_, ps, d, dtype_bytes=2):
+    s = np_ * ps
+    return verify_decode_cost(b, hq, k1, s, d, dtype_bytes)
+
+
+def _supports_blocked(shapes, dtype):
+    # k is [B, Hkv, S, D]; the kernel tiles S without padding
+    return shapes[1][2] % 8 == 0
+
+
+@xaif.register("verify_decode", "ref", cost_fn=verify_decode_cost,
+               description="K1 sequential decode-attention steps stacked; "
+                           "bitwise-identical to plain greedy decode")
+def verify_decode_ref_op(q, k, v, cache_pos, scale: Optional[float] = None):
+    return _ref.verify_decode_ref(q, k, v, cache_pos, scale)
+
+
+@xaif.register("verify_decode", "pallas", cost_fn=verify_decode_cost,
+               supports=_supports_blocked,
+               tunables={"bs": (128, 256, 512)},
+               description="block-sequential Pallas verify attention: one "
+                           "online-softmax pass over KV blocks with a "
+                           "per-query staircase mask")
+def verify_decode_pallas_op(q, k, v, cache_pos,
+                            scale: Optional[float] = None, *,
+                            bs: int = 128, interpret: bool = False):
+    return _k.verify_decode_pallas(q, k, v, cache_pos, scale,
+                                   bs=bs, interpret=interpret)
+
+
+@xaif.register("verify_decode_paged", "ref", cost_fn=verify_decode_paged_cost,
+               description="K1 sequential paged decode-attention steps "
+                           "stacked; bitwise-identical to plain decode")
+def verify_decode_paged_ref_op(q, k_pages, v_pages, page_table, cache_pos,
+                               scale: Optional[float] = None):
+    return _ref.verify_decode_paged_ref(q, k_pages, v_pages, page_table,
+                                        cache_pos, scale)
+
+
+@xaif.register("verify_decode_paged", "pallas", cost_fn=verify_decode_paged_cost,
+               description="page-blocked Pallas verify attention: one grid "
+                           "step per page, page ids scalar-prefetched, "
+                           "per-query staircase mask")
+def verify_decode_paged_pallas_op(q, k_pages, v_pages, page_table,
+                                  cache_pos,
+                                  scale: Optional[float] = None, *,
+                                  interpret: bool = False):
+    return _k.verify_decode_paged_pallas(q, k_pages, v_pages, page_table,
+                                         cache_pos, scale,
+                                         interpret=interpret)

@@ -1,0 +1,54 @@
+"""Reference multi-token verification attention for speculative decoding.
+
+A verify step scores K1 = k+1 query tokens per sequence (the previous
+token plus k draft proposals) against a KV cache whose rows for those
+positions have just been written. Query i of sequence b may attend
+positions ``<= cache_pos[b] + i`` — exactly the window the i-th
+SEQUENTIAL decode step would see.
+
+The ref backends are therefore CONSTRUCTED as K1 applications of the
+single-token decode references (``attn_decode_ref`` /
+``paged_attention_ref``) at ``cache_pos + i``: bitwise identity between
+greedy speculative decoding and plain greedy decoding rests on this
+backend, the same way the engine's token-identity matrix rests on the
+decode refs themselves. Speculative decoding gates to the standard GQA
+attention path, so the MLA ``precise``/``q2``/``k2`` variants are not
+part of this op's contract.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attn_decode.ref import attn_decode_ref
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def verify_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                      cache_pos: jax.Array,
+                      scale: Optional[float] = None) -> jax.Array:
+    """q [B, Hq, K1, D]; k [B, Hkv, S, D]; v [B, Hkv, S, Dv]; cache_pos [B]
+    i32 (query i attends positions <= cache_pos + i). Returns fp32
+    [B, Hq, K1, Dv] — row i bitwise equal to the i-th sequential
+    ``attn_decode_ref`` step."""
+    k1 = q.shape[2]
+    outs = [attn_decode_ref(q[:, :, i, :], k, v, cache_pos + i, scale)
+            for i in range(k1)]
+    return jnp.stack(outs, axis=2)
+
+
+def verify_decode_paged_ref(q: jax.Array, k_pages: jax.Array,
+                            v_pages: jax.Array, page_table: jax.Array,
+                            cache_pos: jax.Array,
+                            scale: Optional[float] = None) -> jax.Array:
+    """q [B, Hq, K1, D]; k_pages [P, Hkv, ps, D]; v_pages [P, Hkv, ps, Dv];
+    page_table [B, NP] i32 (-1 = unallocated -> masked); cache_pos [B].
+    Returns fp32 [B, Hq, K1, Dv] — row i bitwise equal to the i-th
+    sequential ``paged_attention_ref`` step."""
+    k1 = q.shape[2]
+    outs = [paged_attention_ref(q[:, :, i, :], k_pages, v_pages, page_table,
+                                cache_pos + i, scale)
+            for i in range(k1)]
+    return jnp.stack(outs, axis=2)

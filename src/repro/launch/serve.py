@@ -48,6 +48,18 @@ decode. Invalid combinations (``--preemption`` without ``--paged``, a
 chunk size off the page grid, a recurrent arch with ``--prefill-chunk``)
 die at argument parsing with an actionable message.
 
+``--draft ARCH --spec-k N`` turns on speculative decoding: the draft arch
+(reduced) proposes N tokens per live slot per round and the target model
+verifies all of them in ONE batched ``verify_decode`` forward; accepted
+prefixes advance multiple positions per chunk and KV pages grow by the
+accepted count. Greedy tokens are identical to plain decode; sampled
+requests go through residual rejection sampling (distribution-
+preserving). Rejected at parse time: unknown draft arch, ``--spec-k``
+below 1, vocab mismatch, recurrent/MLA/MoE archs on either side, and
+``--gated``/``--threshold``/``--prefill-chunk`` combos (verification
+needs full-model logits; chunked admission never fills the draft KV).
+The serve epilogue prints the measured draft-acceptance rate.
+
 ``--temperature`` / ``--top-k`` / ``--top-p`` switch the scan body from
 greedy argmax to temperature / top-k / nucleus sampling through per-slot
 PRNG keys (``--sample-seed`` makes streams reproducible; a per-request
@@ -167,6 +179,14 @@ def main():
                          "moment the SLO is already missed (0 = off)")
     ap.add_argument("--sample-seed", type=int, default=0,
                     help="base seed of the per-slot sampling PRNG keys")
+    ap.add_argument("--draft", default="", metavar="ARCH",
+                    help="speculative decoding: run this arch (reduced) as "
+                         "the draft model — k proposals per live slot per "
+                         "round, verified in ONE batched target forward; "
+                         "greedy tokens stay identical to plain decode")
+    ap.add_argument("--spec-k", type=int, default=None, metavar="N",
+                    help="draft proposals per speculative round "
+                         "(requires --draft; default 4)")
     ap.add_argument("--inject-fault", default="", metavar="SPEC",
                     help="chaos smoke: SPEC is site=<name>,chunk=<n> — "
                          "inject one deterministic fault at the n-th call "
@@ -218,6 +238,35 @@ def main():
                      f"boundaries must land on page boundaries")
     if args.priority < 0:
         ap.error("--priority must be >= 0 (number of priority classes)")
+    spec_k = args.spec_k
+    if spec_k is not None and not args.draft:
+        ap.error("--spec-k requires --draft: k counts DRAFT proposals per "
+                 "speculative round — name the draft arch")
+    if spec_k is not None and spec_k < 1:
+        ap.error(f"--spec-k must be >= 1 (got {spec_k}): each round "
+                 "proposes at least one draft token")
+    if args.draft:
+        spec_k = spec_k or 4
+        if args.draft not in list_archs():
+            ap.error(f"--draft {args.draft!r} is not a known arch "
+                     f"(choices: {', '.join(list_archs())})")
+        if args.gated:
+            ap.error("--draft cannot be combined with --gated: batched "
+                     "verification scores all k+1 positions with the FULL "
+                     "model — the entropy-gated early-exit decode path has "
+                     "no verify equivalent, so spec decode disables "
+                     "early exit entirely")
+        if args.threshold is not None:
+            ap.error("--draft cannot be combined with --threshold: "
+                     "speculative serving strips the target's early-exit "
+                     "heads (verification must score every position with "
+                     "full-model logits), so an exit threshold would be "
+                     "silently ignored — drop one of the two flags")
+        if args.prefill_chunk:
+            ap.error("--draft cannot be combined with --prefill-chunk: "
+                     "chunked admission writes target KV page-by-page and "
+                     "never prefills the draft's slot cache — the draft "
+                     "would propose from uninitialized rows")
     fault_spec = None
     if args.inject_fault:
         from repro.serve.faults import SITES
@@ -299,6 +348,37 @@ def main():
                  f"ride on the shared-prefill entry); {args.arch} has "
                  f"recurrent/MLA/MoE blocks")
 
+    spec = None
+    if args.draft:
+        from repro.serve.engine import SpecConfig
+        draft_cfg = get_arch(args.draft).reduced()
+        for role, c, name in (("target", cfg, args.arch),
+                              ("draft", draft_cfg, args.draft)):
+            if not (all(b.mixer == "attn" for b in c.block_pattern)
+                    and c.mla is None and c.moe is None):
+                ap.error(f"--draft needs all-attention GQA archs on both "
+                         f"sides (verify_decode scatters plain KV rows); "
+                         f"the {role} arch {name} has recurrent/MLA/MoE "
+                         f"blocks")
+        if draft_cfg.vocab_size != cfg.vocab_size:
+            ap.error(f"--draft {args.draft} has vocab_size "
+                     f"{draft_cfg.vocab_size} but target {args.arch} has "
+                     f"{cfg.vocab_size}: rejection sampling needs the two "
+                     f"distributions over the SAME token alphabet")
+        if draft_cfg.early_exit is not None:
+            draft_cfg = dataclasses.replace(draft_cfg, early_exit=None)
+        if cfg.early_exit is not None:
+            # verification must score all k+1 positions with full-model
+            # logits; the exit merge has no verify equivalent — rebuild the
+            # run/params pair without the exit heads
+            cfg = dataclasses.replace(cfg, early_exit=None)
+            run = RunConfig(arch=cfg, shape=SHAPES_BY_NAME["decode_32k"],
+                            accel=policy)
+            params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+            print(f"spec decode: early-exit heads of {args.arch} disabled "
+                  f"for serving (verification uses full-model logits)")
+        spec = SpecConfig(draft_arch=draft_cfg, k=spec_k)
+
     overload = None
     if (args.preemption or args.priority > 1 or args.prefill_chunk
             or args.slo_ttft_ms > 0):
@@ -336,7 +416,7 @@ def main():
                         mesh=mesh, sharding=SERVE_POLICY if mesh else None,
                         temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p, sample_seed=args.sample_seed,
-                        prefix_sharing=args.prefix_sharing)
+                        prefix_sharing=args.prefix_sharing, spec=spec)
     # the engine's jitted entries carry their own shardings; shard_ctx
     # around the stream simulator covers any ad-hoc constrain/device_put
     # in the serve path (identity when no mesh is installed)
@@ -401,6 +481,13 @@ def main():
     print(f"  concurrency: peak {int(report.stats['max_concurrency'])} "
           f"slots" + (f", peak pages {int(report.stats['peak_pages'])}"
                       f"/{engine.num_pages - 1}" if args.paged else ""))
+    if spec is not None:
+        print(f"  spec[k={spec.k} draft={args.draft}]: acceptance "
+              f"{report.stats['spec_acceptance']:.1%} "
+              f"({int(report.stats['spec_accepted'])}/"
+              f"{int(report.stats['spec_proposed'])} drafts accepted), "
+              f"{int(report.stats['realized_tokens'])} realized tokens "
+              f"over {engine.decode_calls} chunks")
     if args.prefix_sharing:
         print(f"  sharing: {int(report.stats['shared_admissions'])} shared "
               f"admissions, {int(report.stats['shared_tokens'])} prompt "

@@ -379,6 +379,65 @@ def apply_attention_decode_paged(params, x, cfg: ArchConfig,
     return xaif.call("gemm", policy, out, params["wo"]), PagedKVCache(kp, vp)
 
 
+def apply_attention_verify(params, x, cfg: ArchConfig,
+                           policy: xaif.PolicyLike, cache: KVCache,
+                           cache_pos: jax.Array
+                           ) -> Tuple[jax.Array, KVCache]:
+    """Multi-token speculative verify. x [B, K1, d] holds the previous token
+    plus k draft proposals; cache_pos [B] is the FIRST row's position. All K1
+    K/V rows are scattered at ``cache_pos + i`` in one shot, then the
+    ``verify_decode`` XAIF op scores every query under its own staircase
+    window — row i bitwise equal to the i-th sequential
+    ``apply_attention_decode`` step (the greedy acceptance rule compares
+    against these rows directly). Rows past the cache extent are dropped by
+    the scatter (JAX OOB-set semantics); they can only be read by queries
+    that the engine clamps away (beyond-budget rows)."""
+    b, k1, _ = x.shape
+    hq, dh = cfg.num_heads, cfg.head_dim
+    pos = cache_pos[:, None] + jnp.arange(k1)[None, :]       # [B, K1]
+    q, k, v = _project_qkv(params, x, cfg, policy, pos)
+    # advanced indices (bidx, pos) are split by the head slice, so the
+    # scattered value carries the advanced dims first: [B, K1, Hkv, D]
+    bidx = jnp.arange(b)[:, None]
+    ck = cache.k.at[bidx, :, pos, :].set(
+        k.transpose(0, 2, 1, 3).astype(cache.k.dtype))
+    cv = cache.v.at[bidx, :, pos, :].set(
+        v.transpose(0, 2, 1, 3).astype(cache.v.dtype))
+    out = xaif.call("verify_decode", policy, q, ck, cv, cache_pos)
+    out = out.transpose(0, 2, 1, 3).reshape(b, k1, hq * dh).astype(x.dtype)
+    return xaif.call("gemm", policy, out, params["wo"]), KVCache(ck, cv)
+
+
+def apply_attention_verify_paged(params, x, cfg: ArchConfig,
+                                 policy: xaif.PolicyLike, state: PagedKVCache,
+                                 cache_pos: jax.Array, page_table: jax.Array
+                                 ) -> Tuple[jax.Array, PagedKVCache]:
+    """Paged multi-token speculative verify (sibling of
+    ``apply_attention_verify``). Each of the K1 rows lands in its own
+    (page, offset); rows whose position falls on an unallocated (-1) entry
+    — or past the table extent, which an unguarded gather would CLAMP onto
+    a live page — are routed to the scratch page 0 instead."""
+    b, k1, _ = x.shape
+    hq, dh = cfg.num_heads, cfg.head_dim
+    ps = state.k_pages.shape[2]
+    np_ = page_table.shape[1]
+    pos = cache_pos[:, None] + jnp.arange(k1)[None, :]       # [B, K1]
+    q, k, v = _project_qkv(params, x, cfg, policy, pos)
+    bidx = jnp.arange(b)[:, None]
+    in_range = pos < np_ * ps
+    pid = page_table[bidx, jnp.where(in_range, pos // ps, 0)]
+    safe = jnp.where(in_range & (pid >= 0), pid, 0)          # [B, K1]
+    off = pos % ps
+    kp = state.k_pages.at[safe, :, off, :].set(
+        k.transpose(0, 2, 1, 3).astype(state.k_pages.dtype))
+    vp = state.v_pages.at[safe, :, off, :].set(
+        v.transpose(0, 2, 1, 3).astype(state.v_pages.dtype))
+    out = xaif.call("verify_decode_paged", policy, q, kp, vp, page_table,
+                    cache_pos)
+    out = out.transpose(0, 2, 1, 3).reshape(b, k1, hq * dh).astype(x.dtype)
+    return xaif.call("gemm", policy, out, params["wo"]), PagedKVCache(kp, vp)
+
+
 # ---------------------------------------------------------------------------
 # MLA (DeepSeek-V2)
 # ---------------------------------------------------------------------------

@@ -73,6 +73,10 @@ def _apply_layer(p, x, spec: BlockSpec, cfg: ArchConfig, policy: xaif.PolicyLike
     consume expert capacity or skew the aux-loss counts."""
     h = rmsnorm(p["ln1"], x, policy, cfg.norm_eps)
     new_state = None
+    if mode == "verify" and (spec.mixer != "attn" or cfg.mla is not None):
+        raise ValueError(
+            "speculative verify requires a non-MLA all-attention arch "
+            f"(got mixer={spec.mixer!r}, mla={cfg.mla is not None})")
     if spec.mixer == "attn":
         if cfg.mla is not None:
             if mode == "decode":
@@ -87,7 +91,15 @@ def _apply_layer(p, x, spec: BlockSpec, cfg: ArchConfig, policy: xaif.PolicyLike
                 out, new_state = attn.apply_mla(p["mixer"], h, cfg, policy,
                                                 cache=state)
         else:
-            if mode == "decode":
+            if mode == "verify":
+                if isinstance(state, attn.PagedKVCache):
+                    out, new_state = attn.apply_attention_verify_paged(
+                        p["mixer"], h, cfg, policy, state, cache_pos,
+                        page_table)
+                else:
+                    out, new_state = attn.apply_attention_verify(
+                        p["mixer"], h, cfg, policy, state, cache_pos)
+            elif mode == "decode":
                 if isinstance(state, attn.PagedKVCache):
                     out, new_state = attn.apply_attention_decode_paged(
                         p["mixer"], h, cfg, policy, state, cache_pos,
@@ -141,8 +153,11 @@ def _apply_layer(p, x, spec: BlockSpec, cfg: ArchConfig, policy: xaif.PolicyLike
         x = x + out2
     # residual stream: batch over data axes, sequence-parallel over the
     # model axis when enabled (shards the saved scan carries — the remat
-    # residuals — 16x; GSPMD inserts the Megatron-SP gather/scatter pair)
-    x = constrain(x, "batch", "sp" if x.shape[1] > 1 else None, None)
+    # residuals — 16x; GSPMD inserts the Megatron-SP gather/scatter pair).
+    # Verify keeps the decode-style constraint: its K1 axis is a handful of
+    # draft tokens, not a shardable sequence.
+    sp = "sp" if (x.shape[1] > 1 and mode != "verify") else None
+    x = constrain(x, "batch", sp, None)
     return x, aux, new_state
 
 
@@ -705,6 +720,55 @@ def forward_decode(params, tokens, cfg: ArchConfig, policy: xaif.PolicyLike,
     else:
         new_cache = LMCache(tuple(new_prefix), new_slots, cache.pos + 1)
     return logits, tuple(exit_lg), new_cache
+
+
+def forward_verify(params, tokens, cfg: ArchConfig, policy: xaif.PolicyLike,
+                   cache, live=None):
+    """Speculative-decode verification: score K1 = k+1 tokens per slot (the
+    previous token plus k draft proposals) in ONE forward. tokens [B, K1].
+
+    Every layer runs the multi-token verify attention (all K1 KV rows
+    written at ``pos + i``, each query masked to its own staircase window),
+    so logits row i is bitwise what the i-th sequential ``forward_decode``
+    step would have produced — the greedy acceptance rule in the engine
+    compares draft proposals against these rows directly.
+
+    Returns (logits [B, K1, V], new_cache). ``new_cache.pos`` is UNCHANGED:
+    the caller advances it by the realized accept count (rows past the
+    accepted prefix hold KV for rejected tokens; they are rewritten by the
+    next round before their positions can become valid). Requires an
+    all-attention, non-MLA arch; early exits are not consulted (speculation
+    already amortizes the full depth).
+    """
+    paged = isinstance(cache, PagedLMCache)
+    page_table = cache.page_table if paged else None
+    x = _embed(params, tokens, cfg)
+    cache_pos = cache.pos
+    new_prefix = []
+    for i in range(cfg.first_k_dense):
+        x, _, ns = _apply_layer(params["prefix"][i], x, cfg.layer_spec(i), cfg,
+                                policy, state=cache.prefix[i], mode="verify",
+                                cache_pos=cache_pos, page_table=page_table,
+                                live=live)
+        new_prefix.append(ns)
+    new_slots = cache.slots
+    for sb_start, sb_end, _exit_i in _segments(cfg):
+        x, _, seg_states = _scan_segment(
+            params["slots"], x, sb_start, sb_end, cfg, policy, mode="verify",
+            states=cache.slots, cache_pos=cache_pos, page_table=page_table,
+            live=live)
+        if sb_end > sb_start:
+            new_slots = jax.tree_util.tree_map(
+                lambda full, seg: jax.lax.dynamic_update_slice_in_dim(
+                    full, seg.astype(full.dtype), sb_start, axis=0),
+                new_slots, seg_states)
+    logits = _head(params, x, cfg, policy)                   # [B, K1, V]
+    if paged:
+        new_cache = PagedLMCache(tuple(new_prefix), new_slots, cache.pos,
+                                 cache.page_table)
+    else:
+        new_cache = LMCache(tuple(new_prefix), new_slots, cache.pos)
+    return logits, new_cache
 
 
 def _kv_propagate_layer(p, x_exit, cfg: ArchConfig, policy, state, cache_pos):

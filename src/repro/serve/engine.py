@@ -54,6 +54,7 @@ the decode batch; that caveat is gone.)
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
@@ -62,7 +63,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import RunConfig, ShardingPolicy
+from repro.configs.base import ArchConfig, RunConfig, ShardingPolicy, get_arch
 from repro.core.early_exit import gated_layer_fraction, merge_exit_logits
 from repro.dist import sharding as shd
 from repro.models import attention as attn
@@ -192,6 +193,11 @@ class DecodeState(NamedTuple):
     gated_layers: jax.Array  # f32 — Σ of per-slot gated layer fractions
     live_cnt: jax.Array      # f32 — Σ over steps of live slots
     quarantined: jax.Array   # [S] bool — NaN/Inf guard tripped for the slot
+    # SCALAR accumulators (not per-slot: slot reuse must not lose a retired
+    # request's contribution)
+    realized: jax.Array      # f32 — Σ tokens actually emitted by decode chunks
+    spec_prop: jax.Array     # f32 — Σ draft tokens proposed (spec decode)
+    spec_acc: jax.Array      # f32 — Σ draft tokens accepted (spec decode)
 
 
 def init_decode_state(capacity: int, seed: int = 0) -> DecodeState:
@@ -205,7 +211,28 @@ def init_decode_state(capacity: int, seed: int = 0) -> DecodeState:
         rng=jax.vmap(lambda i: jax.random.fold_in(base, i))(
             jnp.arange(capacity)),
         exit_cnt=z, gated_layers=z, live_cnt=z,
-        quarantined=jnp.zeros((capacity,), bool))
+        quarantined=jnp.zeros((capacity,), bool),
+        realized=z, spec_prop=z, spec_acc=z)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding knob for :class:`SlotEngine`.
+
+    ``draft_arch``: registry name or :class:`ArchConfig` of the small draft
+    model that proposes ``k`` tokens per live slot per round; the target
+    then scores all proposals in ONE batched ``forward_verify`` and accepts
+    a per-slot variable-length prefix. Greedy output is token-identical to
+    plain greedy decode no matter how good the draft is — acceptance
+    compares proposals against the target's own argmax rows, so draft
+    quality moves THROUGHPUT only. ``share_params=True`` runs the draft
+    with the target's own weights (requires ``draft_arch`` == the target
+    arch): the provably-perfect-acceptance configuration benchmarks use as
+    the high-acceptance reference stream."""
+    draft_arch: object                   # registry name or ArchConfig
+    k: int = 4                           # proposals per round
+    draft_seed: int = 0                  # draft init_lm seed
+    share_params: bool = False           # tied self-draft (bench reference)
 
 
 def make_sampler(temperature: float, top_k: int = 0,
@@ -239,6 +266,34 @@ def make_sampler(temperature: float, top_k: int = 0,
         return jax.random.categorical(key, lg).astype(jnp.int32)
 
     return sample
+
+
+def make_probs(temperature: float, top_k: int = 0,
+               top_p: float = 1.0) -> Optional[Callable]:
+    """probs(logits [V]) -> [V] f32, or None for greedy.
+
+    The EXACT distribution :func:`make_sampler` draws from (temperature,
+    then top-k, then nucleus truncation) as an explicit probability vector
+    — speculative decoding's residual rejection rule needs p and q as
+    densities, not just draws, to stay distribution-preserving."""
+    if temperature <= 0.0:
+        return None
+
+    def probs(logits):
+        lg = logits.astype(jnp.float32) / temperature
+        if top_k > 0:
+            kth = jax.lax.top_k(lg, top_k)[0][-1]
+            lg = jnp.where(lg < kth, -jnp.inf, lg)
+        if 0.0 < top_p < 1.0:
+            order = jnp.argsort(-lg)                   # descending
+            sorted_lg = lg[order]
+            p = jax.nn.softmax(sorted_lg)
+            keep = (jnp.cumsum(p) - p) < top_p
+            sorted_lg = jnp.where(keep, sorted_lg, -jnp.inf)
+            lg = jnp.full_like(lg, -jnp.inf).at[order].set(sorted_lg)
+        return jax.nn.softmax(lg)
+
+    return probs
 
 
 def _admit_slot(st: DecodeState, logits0, slot, max_new,
@@ -450,7 +505,8 @@ def make_decode_chunk(run: RunConfig, steps: int, gated: bool = False,
             exit_cnt=st.exit_cnt + jnp.sum(exited.astype(jnp.float32) * live_f),
             gated_layers=st.gated_layers + jnp.sum(gated_frac * live_f),
             live_cnt=st.live_cnt + jnp.sum(live_f),
-            quarantined=st.quarantined | bad)
+            quarantined=st.quarantined | bad,
+            realized=st.realized + jnp.sum(ok.astype(jnp.float32)))
         return (new_cache, st), next_tok
 
     def decode_chunk(params, cache: lm.LMCache, st: DecodeState):
@@ -459,6 +515,204 @@ def make_decode_chunk(run: RunConfig, steps: int, gated: bool = False,
         return cache, st, jnp.swapaxes(toks, 0, 1)      # [S, steps]
 
     return decode_chunk
+
+
+def make_draft_prefill(cfg: ArchConfig, policy, bucket_len: int):
+    """Per-bucket draft admission: batch-1 prefill of the FULL prompt into
+    the draft's contiguous slot cache. No logits, no DecodeState — the
+    round's first draft step starts from the target's last emitted token,
+    so only the KV (and the slot position = true length) matter."""
+
+    def draft_prefill(dparams, dcache: lm.LMCache, tokens, true_len, slot):
+        slot_cache = lm.init_cache(cfg, 1, bucket_len)
+        _, slot_cache = lm.forward_prefill(dparams, tokens, cfg, policy,
+                                           slot_cache, lengths=true_len[None])
+        return lm.fill_slot(dcache, slot_cache, slot, true_len)
+
+    return draft_prefill
+
+
+def make_spec_decode_chunk(run: RunConfig, draft_cfg: ArchConfig, k: int,
+                           steps: int, sampler: Optional[Callable] = None,
+                           probs: Optional[Callable] = None):
+    """One jitted lax.scan of ``steps`` SPECULATIVE rounds over the slots.
+
+    Each round: ``k`` sequential draft decode steps propose d_1..d_k from
+    the last emitted token t_0; ONE target ``forward_verify`` over
+    [t_0, d_1..d_k] writes the K1 = k+1 KV rows at pos..pos+k and yields
+    logits whose row i is bitwise the i-th sequential decode step. The
+    accepted prefix (plus the correction/bonus row) advances each slot by a
+    VARIABLE n_real ∈ [0, k+1] positions — budget-clipped, NaN-guarded and
+    position-pinned exactly like the plain chunk.
+
+    Token identity (greedy): every emitted token is the argmax of a target
+    logits row whose conditioning rows all hold already-accepted (= plain
+    greedy) tokens, so the emitted stream equals plain greedy decode
+    bitwise regardless of draft quality; rows past the accepted prefix hold
+    rejected-draft KV and are REWRITTEN by the next round's verify before
+    their positions can become valid.
+
+    Sampling: standard residual rejection sampling — draft token d ~ q is
+    accepted iff u·q(d) < p(d); the first rejection resamples from the
+    residual (p − q)+, full acceptance draws the bonus token from the last
+    row's p — so every emitted token is marginally ~ p (the exact
+    ``make_sampler`` distribution). Keys advance along a per-slot split
+    CHAIN, one link per EMITTED token, so a seeded request's stream depends
+    only on its emitted prefix — placement- and chunk-boundary-independent.
+
+    The draft keeps its own contiguous slot cache; its position row is
+    re-synced to the target's every round (``draft.pos = target.pos``), so
+    a swap-resumed or restored slot self-heals: stale draft KV can only
+    depress the acceptance rate, never the output (see the identity
+    argument above).
+
+    Returns (cache, dcache, st, packed [S, steps*(k+1)]) — per-slot valid
+    tokens left-packed in emission order, invalid lanes arbitrary (the
+    scheduler reads exactly the per-slot ``generated`` delta).
+    """
+    cfg, policy = run.arch, run.accel
+    k1 = k + 1
+
+    def body(params, dparams, carry, _):
+        cache, dcache, st = carry
+        live = ~st.done
+        # -- per-slot key chain: c_0 = st.rng, use_j/c_{j+1} = split(c_j).
+        # use_j belongs to EMITTED position j and 3-splits into the draft
+        # proposal, acceptance-uniform and residual/bonus keys; the round
+        # consumes n_real links so replay is acceptance-pattern faithful.
+        if sampler is not None:
+            links, uses, cur = [st.rng], [], st.rng
+            for _j in range(k1):
+                sp = jax.vmap(lambda c: jax.random.split(c, 2))(cur)
+                uses.append(sp[:, 0])
+                cur = sp[:, 1]
+                links.append(cur)
+            chain = jnp.stack(links, axis=1)           # [S, k+2, 2]
+            use = jnp.stack(uses, axis=1)              # [S, k+1, 2]
+            trip = jax.vmap(jax.vmap(
+                lambda c: jax.random.split(c, 3)))(use)  # [S, k+1, 3, 2]
+        # -- draft: k sequential proposals from t_0 (positions re-synced to
+        # the target's — the invariant holds at every round boundary and
+        # self-heals one round after any restore/swap staleness). One EXTRA
+        # step feeds d_k with its logits discarded: a fully-accepted round
+        # (k accepts + bonus) advances the target past d_k's position, so
+        # the draft must hold d_k's KV row or the NEXT round's proposals
+        # would be conditioned on a never-written row.
+        dc = dcache._replace(pos=cache.pos)
+        cur_tok = st.tokens
+        dmat, dq = [], []
+        for j in range(k1):
+            dlg, _, dc = lm.forward_decode(dparams, cur_tok[:, None],
+                                           draft_cfg, policy, dc,
+                                           with_exits=False, live=live)
+            if j == k:
+                break                      # KV-ingest step for d_k only
+            # draft garbage can never corrupt OUTPUT (acceptance filters
+            # against the target), only acceptance rate — but non-finite q
+            # would poison the accept arithmetic itself, so clamp it
+            dlg = dlg.astype(jnp.float32)
+            dlg = jnp.where(jnp.isfinite(dlg), dlg, -1e30)
+            if sampler is None:
+                d = jnp.argmax(dlg, axis=-1).astype(jnp.int32)
+            else:
+                q = jax.vmap(probs)(dlg)               # [S, V]
+                d = jax.vmap(jax.random.categorical)(
+                    trip[:, j, 0], jnp.log(q)).astype(jnp.int32)
+                dq.append(q)
+            dmat.append(d)
+            cur_tok = d
+        dmat = jnp.stack(dmat, axis=1)                 # [S, k]
+        # -- verify: one batched target forward over [t_0, d_1..d_k]
+        vtokens = jnp.concatenate([st.tokens[:, None], dmat], axis=1)
+        vlg, vcache = lm.forward_verify(params, vtokens, cfg, policy, cache,
+                                        live=live)
+        vlg = vlg.astype(jnp.float32)                  # [S, K1, V]
+        finite = jnp.all(jnp.isfinite(vlg), axis=-1)   # [S, K1]
+        if sampler is None:
+            tgt = jnp.argmax(vlg, axis=-1).astype(jnp.int32)   # [S, K1]
+            acc = finite[:, :k] & (dmat == tgt[:, :k])
+            emit = tgt
+        else:
+            p = jax.vmap(jax.vmap(probs))(vlg)         # [S, K1, V]
+            dq = jnp.stack(dq, axis=1)                 # [S, k, V]
+            pd = jnp.take_along_axis(p[:, :k], dmat[..., None], 2)[..., 0]
+            qd = jnp.take_along_axis(dq, dmat[..., None], 2)[..., 0]
+            u = jax.vmap(jax.vmap(
+                lambda kk: jax.random.uniform(kk)))(trip[:, :k, 1])
+            # u·q(d) < p(d) ⟺ u < min(1, p/q) for u ~ U[0,1), q(d) > 0
+            acc = finite[:, :k] & (u * qd < pd)
+            # residual (p − q)+ at every candidate rejection row (only the
+            # first rejection's draw is ever emitted); if the residual mass
+            # is numerically zero, fall back to p itself
+            resid = jnp.clip(p[:, :k] - dq, 0.0, None)
+            rmass = jnp.sum(resid, axis=-1, keepdims=True)
+            resid = jnp.where(rmass > 1e-9, resid, p[:, :k])
+            corr = jax.vmap(jax.vmap(jax.random.categorical))(
+                trip[:, :k, 2], jnp.log(resid)).astype(jnp.int32)
+            bonus = jax.vmap(jax.random.categorical)(
+                trip[:, k, 2], jnp.log(p[:, k])).astype(jnp.int32)
+            emit = jnp.concatenate(
+                [jnp.where(acc, dmat, corr), bonus[:, None]], axis=1)
+        # -- variable-length acceptance: a consecutive accepts, then one
+        # correction/bonus row (emitted only if its logits row is finite)
+        a = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1), axis=1)
+        fin_a = jnp.take_along_axis(finite, a[:, None], axis=1)[:, 0]
+        n_acc = a + fin_a.astype(jnp.int32)
+        rem = st.budget - st.generated
+        n_real = jnp.where(live, jnp.minimum(n_acc, rem), 0)
+        bad = live & (n_acc == 0)          # row 0 non-finite: quarantine
+        ok = live & ~bad
+        next_tok = jnp.where(
+            ok,
+            jnp.take_along_axis(
+                emit, jnp.maximum(n_real - 1, 0)[:, None], axis=1)[:, 0],
+            st.tokens)
+        # forward_verify leaves pos unchanged: advance accepted slots by
+        # their realized count, pin everyone else (done slots' garbage rows
+        # land past their valid prefix and are never registered or read)
+        new_pos = jnp.where(ok, cache.pos + n_real, cache.pos)
+        vcache = vcache._replace(pos=new_pos)
+        dc = dc._replace(pos=new_pos)
+        if sampler is None:
+            new_rng = st.rng               # greedy never touches the keys
+        else:
+            new_rng = jnp.where(
+                ok[:, None],
+                jnp.take_along_axis(chain, n_real[:, None, None], 1)[:, 0],
+                st.rng)
+        generated = st.generated + n_real
+        okf = ok.astype(jnp.float32)
+        st = st._replace(
+            tokens=next_tok,
+            done=st.done | (generated >= st.budget) | bad,
+            generated=generated,
+            rng=new_rng,
+            live_cnt=st.live_cnt + jnp.sum(live.astype(jnp.float32)),
+            quarantined=st.quarantined | bad,
+            realized=st.realized + jnp.sum(n_real.astype(jnp.float32)),
+            spec_prop=st.spec_prop + k * jnp.sum(okf),
+            spec_acc=st.spec_acc + jnp.sum(a.astype(jnp.float32) * okf))
+        return (vcache, dc, st), (emit, n_real)
+
+    def spec_decode_chunk(params, dparams, cache, dcache: lm.LMCache,
+                          st: DecodeState):
+        (cache, dcache, st), (emits, nreal) = jax.lax.scan(
+            functools.partial(body, params, dparams), (cache, dcache, st),
+            None, length=steps)
+        emits = jnp.swapaxes(emits, 0, 1)              # [S, steps, K1]
+        nreal = jnp.swapaxes(nreal, 0, 1)              # [S, steps]
+        s = emits.shape[0]
+        flat = emits.reshape(s, steps * k1)
+        valid = (jnp.arange(k1)[None, None, :]
+                 < nreal[:, :, None]).reshape(s, steps * k1)
+        # left-pack the valid tokens, preserving emission order (argsort on
+        # the invalid mask is stable), so the scheduler's
+        # ``toks[slot, :generated_delta]`` read stays contiguous
+        order = jnp.argsort(~valid, axis=1, stable=True)
+        packed = jnp.take_along_axis(flat, order, axis=1)
+        return cache, dcache, st, packed               # [S, steps*(k+1)]
+
+    return spec_decode_chunk
 
 
 class SlotEngine:
@@ -507,7 +761,8 @@ class SlotEngine:
                  temperature: float = 0.0, top_k: int = 0,
                  top_p: float = 1.0, sample_seed: int = 0,
                  prefix_sharing: bool = False,
-                 persistent_prefix_index: bool = False):
+                 persistent_prefix_index: bool = False,
+                 spec: Optional[SpecConfig] = None):
         cfg = run.arch
         if gated:
             assert (cfg.early_exit is not None
@@ -531,6 +786,33 @@ class SlotEngine:
         if persistent_prefix_index:
             assert prefix_sharing, \
                 "a persistent PrefixIndex needs prefix_sharing=True"
+        self.spec = spec
+        self.draft_cfg: Optional[ArchConfig] = None
+        if spec is not None:
+            assert not gated, \
+                "speculative decoding is incompatible with gated decode " \
+                "(verification amortizes the full depth — there is no " \
+                "per-token exit to gate on)"
+            assert spec.k >= 1, f"spec.k must be >= 1, got {spec.k}"
+            dcfg = spec.draft_arch
+            if isinstance(dcfg, str):
+                dcfg = get_arch(dcfg)
+            for c, who in ((cfg, "target"), (dcfg, "draft")):
+                assert all(b.mixer == "attn" for b in c.block_pattern) \
+                    and c.mla is None and c.moe is None, \
+                    f"speculative decoding needs an all-attention GQA " \
+                    f"{who} arch (no MLA/MoE/recurrent mixers yet)"
+            assert cfg.early_exit is None, \
+                "speculative decoding skips the exit merge, so an " \
+                "early-exit target would change tokens — not supported"
+            assert dcfg.vocab_size == cfg.vocab_size, \
+                (dcfg.vocab_size, cfg.vocab_size)
+            if spec.share_params:
+                assert dcfg == cfg, \
+                    "share_params ties the draft to the target's weights " \
+                    "— the draft arch must equal the target arch"
+            self.draft_cfg = dcfg
+        self.spec_k = spec.k if spec is not None else 0
         self.run = run
         self.capacity = capacity
         self.max_len = max_len
@@ -590,23 +872,59 @@ class SlotEngine:
 
         # resolved once: (params_sh, cache_sh, state_sh) or None (no mesh)
         self._shardings = self._resolve_shardings()
+        # spec only: (draft_params_sh, draft_cache_sh) or None
+        self._spec_shardings = self._resolve_spec_shardings()
 
-        decode_fn = make_decode_chunk(run, chunk, gated, self._sampler)
+        # draft model state (spec only): the engine OWNS the draft weights
+        # and the draft's contiguous slot cache — the scheduler API is
+        # unchanged, it just sees a wider token matrix per chunk
+        self.draft_params = None
+        self._draft_cache = None
+        if spec is not None and not spec.share_params:
+            self.draft_params = lm.init_lm(
+                jax.random.PRNGKey(spec.draft_seed), self.draft_cfg)
+            if self._spec_shardings is not None:
+                self.draft_params = jax.device_put(
+                    self.draft_params, self._spec_shardings[0])
 
-        def counted_decode(params, cache, st):
-            self.decode_traces += 1          # runs at TRACE time only
-            return decode_fn(params, cache, st)
+        if spec is None:
+            decode_fn = make_decode_chunk(run, chunk, gated, self._sampler)
 
-        jit_kw = {}
-        if self._shardings is not None:
-            params_sh, cache_sh, state_sh = self._shardings
-            jit_kw = dict(
-                in_shardings=(params_sh, cache_sh, state_sh),
-                out_shardings=(cache_sh, state_sh,
-                               NamedSharding(self.mesh, P(None, None))))
-        self._decode = jax.jit(self._traced(counted_decode),
-                               donate_argnums=(1, 2), **jit_kw)
+            def counted_decode(params, cache, st):
+                self.decode_traces += 1      # runs at TRACE time only
+                return decode_fn(params, cache, st)
+
+            jit_kw = {}
+            if self._shardings is not None:
+                params_sh, cache_sh, state_sh = self._shardings
+                jit_kw = dict(
+                    in_shardings=(params_sh, cache_sh, state_sh),
+                    out_shardings=(cache_sh, state_sh,
+                                   NamedSharding(self.mesh, P(None, None))))
+            self._decode = jax.jit(self._traced(counted_decode),
+                                   donate_argnums=(1, 2), **jit_kw)
+        else:
+            spec_fn = make_spec_decode_chunk(
+                run, self.draft_cfg, spec.k, chunk, self._sampler,
+                make_probs(temperature, top_k, top_p))
+
+            def counted_spec(params, dparams, cache, dcache, st):
+                self.decode_traces += 1      # runs at TRACE time only
+                return spec_fn(params, dparams, cache, dcache, st)
+
+            jit_kw = {}
+            if self._shardings is not None:
+                params_sh, cache_sh, state_sh = self._shardings
+                dparams_sh, dcache_sh = self._spec_shardings
+                jit_kw = dict(
+                    in_shardings=(params_sh, dparams_sh, cache_sh,
+                                  dcache_sh, state_sh),
+                    out_shardings=(cache_sh, dcache_sh, state_sh,
+                                   NamedSharding(self.mesh, P(None, None))))
+            self._decode = jax.jit(self._traced(counted_spec),
+                                   donate_argnums=(2, 3, 4), **jit_kw)
         self._prefill = {}                   # bucket_len -> jitted fn
+        self._draft_prefill = {}             # bucket_len -> jitted draft fn
         self._prefill_shared = {}            # (suffix_bucket, pcap) -> fn
         self._prefill_chunk = {}             # (chunk_len, pcap) -> fn
         self._copy_page = None               # lazily jitted COW copy
@@ -656,6 +974,20 @@ class SlotEngine:
                 cache_struct, state_struct, self.capacity)
         return params_sh, cache_sh, state_sh
 
+    def _resolve_spec_shardings(self):
+        if self.mesh is None or self.spec is None:
+            return None
+        dparams_struct = jax.eval_shape(
+            functools.partial(lm.init_lm, jax.random.PRNGKey(0),
+                              self.draft_cfg))
+        dcache_struct = jax.eval_shape(
+            lambda: lm.init_cache(self.draft_cfg, self.capacity,
+                                  self.max_len))
+        with shd.shard_ctx(self.mesh, self.sharding):
+            dparams_sh = shd.param_shardings(dparams_struct)
+            dcache_sh = shd.cache_shardings(dcache_struct, self.capacity)
+        return dparams_sh, dcache_sh
+
     def place_params(self, params):
         """device_put ``params`` per the engine's sharding, so repeated
         decode/prefill calls hit the jit fast path instead of re-sharding
@@ -674,7 +1006,24 @@ class SlotEngine:
         if self._shardings is not None:
             _, cache_sh, state_sh = self._shardings
             kw = dict(out_shardings=(cache_sh, state_sh))
+        if self.spec is not None:
+            # fresh engine-owned draft cache rides along (separate jitted
+            # init: distinct donation-safe buffers)
+            dkw = {}
+            if self._spec_shardings is not None:
+                dkw = dict(out_shardings=self._spec_shardings[1])
+            self._draft_cache = jax.jit(self._traced(
+                functools.partial(lm.init_cache, self.draft_cfg,
+                                  self.capacity, self.max_len)), **dkw)()
         return jax.jit(self._traced(self._init_fn()), **kw)()
+
+    @property
+    def tokens_per_chunk(self) -> int:
+        """Max tokens one decode chunk can realize per slot — what the
+        scheduler's page growth must cover (``chunk`` rounds × the k+1
+        verify rows under speculation, plain ``chunk`` otherwise)."""
+        return self.chunk * (self.spec_k + 1) if self.spec is not None \
+            else self.chunk
 
     # -- chaos injection ---------------------------------------------------
 
@@ -741,7 +1090,33 @@ class SlotEngine:
             assert page_ids.shape == (n_bucket,), (page_ids.shape, n_bucket)
             args = args + (jnp.asarray(page_ids, jnp.int32),)
         self.prefill_tokens += bucket
-        return self._prefill[bucket](*args + self._seed_args(seed))
+        out = self._prefill[bucket](*args + self._seed_args(seed))
+        if self.spec is not None:
+            self._admit_draft(params, padded, t, slot)
+        return out
+
+    def _admit_draft(self, params, padded, t: int, slot: int) -> None:
+        """Prefill the FULL prompt into the draft's slot cache (spec only).
+        Always contiguous and always full-prompt — a fork-point admission
+        shares only the TARGET's KV; the draft's own cache has no radix
+        index yet (ROADMAP follow-up)."""
+        bucket = int(padded.shape[1])
+        if bucket not in self._draft_prefill:
+            make = make_draft_prefill(self.draft_cfg, self.run.accel, bucket)
+            kw = {}
+            if self._spec_shardings is not None:
+                dparams_sh, dcache_sh = self._spec_shardings
+                rep = NamedSharding(self.mesh, P())
+                tok_sh = NamedSharding(self.mesh, P(None, None))
+                kw = dict(in_shardings=(dparams_sh, dcache_sh, tok_sh,
+                                        rep, rep),
+                          out_shardings=dcache_sh)
+            self._draft_prefill[bucket] = jax.jit(self._traced(make),
+                                                  donate_argnums=(1,), **kw)
+        dparams = params if self.spec.share_params else self.draft_params
+        self._draft_cache = self._draft_prefill[bucket](
+            dparams, self._draft_cache, padded,
+            jnp.asarray(t, jnp.int32), jnp.asarray(slot, jnp.int32))
 
     # -- prefix-sharing admission ------------------------------------------
 
@@ -818,7 +1193,12 @@ class SlotEngine:
                 jnp.asarray(pids), jnp.asarray(rids),
                 jnp.asarray(row, jnp.int32))
         self.prefill_tokens += suffix_bucket
-        return self._prefill_shared[key](*args + self._seed_args(seed))
+        out = self._prefill_shared[key](*args + self._seed_args(seed))
+        if self.spec is not None:
+            fb = self._bucket(t)
+            dpadded = jnp.zeros((1, fb), jnp.int32).at[0, :t].set(prompt)
+            self._admit_draft(params, dpadded, t, slot)
+        return out
 
     # -- chunked prefill ---------------------------------------------------
 
@@ -1033,15 +1413,20 @@ class SlotEngine:
         restorable any number of times.
         """
         state_np = jax.device_get(st)
+        # the draft cache is engine-owned derived state, but sampled spec
+        # streams DO depend on it (proposals feed the rejection rule), so
+        # deterministic replay captures it alongside the target KV
+        draft = (jax.device_get(self._draft_cache)
+                 if self.spec is not None else None)
         if self.paged and alloc is not None and self._page_snapshot_ok:
             pids = sorted(alloc.refcnt)
             groups = [pids[i:i + self.max_pages]
                       for i in range(0, len(pids), self.max_pages)]
-            return {"kind": "paged", "state": state_np,
+            return {"kind": "paged", "state": state_np, "draft": draft,
                     "pos": np.asarray(jax.device_get(cache.pos)),
                     "pages": [(g, self.fetch_pages(cache, g))
                               for g in groups]}
-        return {"kind": "full", "state": state_np,
+        return {"kind": "full", "state": state_np, "draft": draft,
                 "cache": jax.device_get(cache)}
 
     def restore(self, snap: dict, alloc=None):
@@ -1052,6 +1437,11 @@ class SlotEngine:
         rows come back too). Compiled traces are untouched; only buffers
         are recreated, so a restore never re-traces."""
         st = self._put_state(snap["state"])
+        if self.spec is not None and snap.get("draft") is not None:
+            dc = jax.tree_util.tree_map(jnp.asarray, snap["draft"])
+            if self._spec_shardings is not None:
+                dc = jax.device_put(dc, self._spec_shardings[1])
+            self._draft_cache = dc
         if snap["kind"] == "paged":
             assert alloc is not None, "paged restore needs the allocator"
             cache, _ = self.init_state()
@@ -1092,18 +1482,49 @@ class SlotEngine:
                              for a in state)
         return total
 
+    def set_draft_params(self, dparams):
+        """Install externally-trained draft weights (e.g. a distilled
+        draft).  Structure must match the engine's initialised draft tree;
+        placement follows the engine mesh."""
+        assert self.spec is not None and not self.spec.share_params, \
+            "engine has no independent draft model"
+        assert (jax.tree.structure(dparams)
+                == jax.tree.structure(self.draft_params)), \
+            "draft param tree does not match the configured draft arch"
+        assert jax.tree.all(jax.tree.map(
+            lambda a, b: a.shape == b.shape and a.dtype == b.dtype,
+            dparams, self.draft_params)), \
+            "draft param tree leaves do not match the configured draft arch"
+        if self._spec_shardings is not None:
+            self.draft_params = jax.device_put(dparams,
+                                               self._spec_shardings[0])
+        else:
+            self.draft_params = jax.device_put(dparams)
+
     # -- decode ------------------------------------------------------------
 
     def decode(self, params, cache, st):
-        """Run one jitted chunk. Returns (cache, st, tokens [S, chunk])."""
+        """Run one jitted chunk. Returns (cache, st, tokens
+        [S, tokens_per_chunk]) — per-slot valid tokens left-packed; the
+        caller reads exactly the per-slot ``generated`` delta."""
         self._check_fault("decode")
         self.decode_calls += 1
-        return self._decode(params, cache, st)
+        if self.spec is None:
+            return self._decode(params, cache, st)
+        dparams = params if self.spec.share_params else self.draft_params
+        cache, self._draft_cache, st, toks = self._decode(
+            params, dparams, cache, self._draft_cache, st)
+        return cache, st, toks
 
     @staticmethod
     def stats(st: DecodeState) -> Dict[str, float]:
         """One host fetch of the on-device accumulators."""
         n = max(float(st.live_cnt), 1.0)
+        prop = float(st.spec_prop)
         return {"exit_rate": float(st.exit_cnt) / n,
                 "gated_fraction": float(st.gated_layers) / n,
-                "decode_slot_steps": float(st.live_cnt)}
+                "decode_slot_steps": float(st.live_cnt),
+                "realized_tokens": float(st.realized),
+                "spec_proposed": prop,
+                "spec_accepted": float(st.spec_acc),
+                "spec_acceptance": float(st.spec_acc) / max(prop, 1.0)}

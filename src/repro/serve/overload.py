@@ -550,7 +550,7 @@ class OverloadScheduler(SlotScheduler):
     # -- decode ------------------------------------------------------------
 
     def _grow_pages(self) -> None:
-        chunk = self.engine.chunk
+        chunk = self.engine.tokens_per_chunk
         now = self._now(0.0)
         for slot in list(self.occupant):
             if slot not in self.occupant:

@@ -351,9 +351,12 @@ class SlotScheduler:
 
     def _grow_pages(self) -> None:
         """On-demand page allocation before a chunk: every live slot gets
-        coverage for the positions this chunk will write (reservation-backed,
-        so the pops cannot fail)."""
-        chunk = self.engine.chunk
+        coverage for the positions this chunk can ACCEPT (reservation-backed,
+        so the pops cannot fail). ``tokens_per_chunk`` is chunk×(k+1) under
+        speculation — a chunk may realize that many tokens per slot; verify
+        rows past the covered positions route to scratch and are never part
+        of an accepted prefix this chunk."""
+        chunk = self.engine.tokens_per_chunk
         for slot in self.occupant:
             gen = self._gen_seen[slot]
             live_steps = min(chunk, self._budget[slot] - gen)
@@ -441,7 +444,12 @@ class SlotScheduler:
                 # host-side early stop: truncate past the first stop token
                 # (inclusive) and retire — the decode scan may have run a
                 # few rows further inside this chunk; they are discarded
+                # AND deducted from the realized count (under speculation a
+                # chunk can overshoot by up to tokens_per_chunk - 1, which
+                # would visibly inflate throughput if left in)
                 k = req.tokens.index(req.stop_token)
+                discarded = len(req.tokens) - (k + 1)
+                produced -= min(discarded, fresh)
                 del req.tokens[k + 1:]
                 del req.itl[max(k, 0):]
                 req.t_finished = max(now, req.arrival)

@@ -129,6 +129,84 @@ def test_attention_causality(seed):
                                atol=1e-5)
 
 
+# -- page allocator under speculative multi-token growth (PR 9) -------------
+
+
+def _allocator_invariants(alloc, live):
+    """Every structural invariant the paged engine relies on, checked
+    after each mutation (non-sharing: each owned page has exactly ONE
+    holder)."""
+    owned_union = [p for pages in alloc.owned.values() for p in pages]
+    assert len(owned_union) == len(set(owned_union)), \
+        "a page is mapped by two slots (or twice in one slot) — aliasing"
+    assert set(alloc.owned) == live
+    assert set(alloc.refcnt) == set(owned_union), \
+        "refcounted pages must be exactly the owned pages"
+    assert all(rc == 1 for rc in alloc.refcnt.values()), \
+        "non-sharing allocator grew a refcount > 1"
+    free = set(alloc.free)
+    assert len(free) == len(alloc.free), "free list holds a duplicate"
+    assert not free & set(owned_union), "a page is both free and owned"
+    assert 0 not in free and 0 not in set(owned_union), \
+        "scratch page 0 entered circulation"
+    assert alloc.pages_in_use == len(set(owned_union))
+    # conservation: every non-scratch page is free XOR refcounted
+    assert len(alloc.free) + len(alloc.refcnt) == alloc.num_pages - 1
+    assert alloc.available >= 0
+    for slot, pages in alloc.owned.items():
+        row = alloc.table[slot]
+        assert list(row[:len(pages)]) == pages, \
+            "mirror table row diverged from ownership"
+        assert all(row[len(pages):] == -1)
+
+
+@given(seed=st.integers(0, 2**16), k=st.integers(1, 5),
+       page_size=st.sampled_from([4, 8]), num_pages=st.integers(6, 40))
+@settings(**SETTINGS)
+def test_page_allocator_speculative_growth_churn(seed, k, page_size,
+                                                 num_pages):
+    """Admission/growth/retire churn with per-chunk accepted advances drawn
+    from [0, k] (speculative decode realizes a VARIABLE token count per
+    slot per chunk) never aliases pages, never bends a refcount, and keeps
+    ``pages_in_use`` identical to the ownership map."""
+    from repro.serve.paging import PageAllocator
+    capacity = 4
+    max_pages = -(-((page_size * 6) + 1) // page_size) + k + 2
+    alloc = PageAllocator(num_pages, capacity, max_pages, page_size)
+    rng = np.random.default_rng(seed)
+    pos = {}                                   # slot -> last written pos
+    budget = {}                                # slot -> retire-at position
+    for _ in range(60):
+        live = set(alloc.owned)
+        op = rng.integers(0, 3)
+        if op == 0 and len(live) < capacity:   # admit a fresh request
+            slot = min(set(range(capacity)) - live)
+            true_len = int(rng.integers(1, page_size * 3))
+            bucket = -(-true_len // page_size) * page_size
+            max_new = int(rng.integers(1, 2 * k + 4))
+            if alloc.can_admit(bucket, true_len, max_new):
+                alloc.admit(slot, bucket, true_len, max_new)
+                pos[slot] = true_len - 1
+                budget[slot] = true_len + max_new - 1
+        elif op == 1 and live:                 # one speculative chunk
+            for slot in sorted(live):
+                accepted = int(rng.integers(0, k + 1))
+                pos[slot] = min(pos[slot] + accepted, budget[slot])
+                alloc.ensure(slot, pos[slot])
+                if pos[slot] >= budget[slot]:  # budget exhausted: retire
+                    alloc.release(slot)
+                    del pos[slot], budget[slot]
+        elif op == 2 and live:                 # early stop / eviction
+            slot = sorted(live)[int(rng.integers(0, len(live)))]
+            alloc.release(slot)
+            del pos[slot], budget[slot]
+        _allocator_invariants(alloc, set(alloc.owned))
+    for slot in sorted(alloc.owned):           # drain: everything frees
+        alloc.release(slot)
+    _allocator_invariants(alloc, set())
+    assert len(alloc.free) == num_pages - 1
+
+
 # -- serving snapshot/restore (PR 8) ----------------------------------------
 # world is the module-scoped engine/params fixture from the resilient
 # serving suite; the case body is shared — hypothesis only drives the
