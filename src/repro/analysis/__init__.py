@@ -1,0 +1,36 @@
+"""repro.analysis — static lint + runtime contract auditors for the stack.
+
+The software analogue of X-HEEP's XAIF contract checking: a backend either
+satisfies the interface contract or it cannot be wired in. PRs 1-9 grew a
+set of implicit contracts ("a latency win cannot silently change numerics",
+"page churn never re-traces", "caches stay donated", "every op has a
+bitwise-identical ref backend") that lived only in example-based tests;
+this package turns them into machine-checked gates that the NEXT kernel,
+backend, or engine path an author adds inherits automatically:
+
+* :mod:`repro.analysis.lint` — a visitor-based AST rule engine over
+  ``src/repro/**`` with jax/pallas-specific rules (tracer leaks, dtype
+  drift, host syncs inside jitted regions, XAIF dispatch bypasses, missing
+  donation). Inline ``# analysis: disable=RULE`` suppression.
+* :mod:`repro.analysis.trace_audit` — a runtime harness that serves a
+  canned churn stream per engine config and asserts ZERO mid-stream decode
+  retraces, zero implicit host transfers in decode chunks
+  (``jax.transfer_guard("disallow")``) and that donated buffers were
+  actually invalidated.
+* :mod:`repro.analysis.registry_audit` — walks the XAIF op registry,
+  autotune cells, per-arch cells and persisted policy JSONs for contract
+  holes (missing ref backend, undeclared tunables, unresolvable cells,
+  lossy backends leaking into exact policies).
+
+``python -m repro.launch.analyze`` runs all three and exits non-zero on
+any finding — CI runs it as a required gate (see CONTRACTS.md for the full
+contract list).
+"""
+from repro.analysis.lint import Finding, lint_file, lint_paths, lint_tree
+from repro.analysis.registry_audit import audit_registry
+from repro.analysis.trace_audit import audit_serve_configs
+
+__all__ = [
+    "Finding", "lint_file", "lint_paths", "lint_tree",
+    "audit_registry", "audit_serve_configs",
+]

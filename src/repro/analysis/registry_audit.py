@@ -1,0 +1,238 @@
+"""XAIF registry / autotune-cell / policy-JSON contract auditor.
+
+Walks the live op registry (after ``xaif._ensure_builtin_backends()``) and
+asserts the contracts every backend author implicitly signed up for:
+
+====== ===================================================================
+XR101  every op has a ``ref`` backend — the bitwise oracle every other
+       backend is verified against and the universal dispatch fallback.
+XR102  declared tunables must be honest: each tunable kwarg exists in the
+       backend's signature as a keyword parameter with a default, and its
+       candidate tuple is non-empty — otherwise a DispatchRule's tuning
+       params would crash (or silently no-op) at call time.
+XR103  every backend declares a cost prior (``cost_fn``) — the autotuner
+       uses it to sanity-check measurements and ``--explain`` output;
+       a backend without one is invisible to roofline reporting.
+XR104  ``supports`` predicates must be callable (2-arg ``(shapes, dtype)``).
+XR105  every (op, bucket) the autotuner enumerates has a measurement cell
+       in ``autotune.CELLS`` — a bucket with no cell silently stays on the
+       policy default forever.
+XR106  every ``CELLS``/``arch_cells`` key resolves: the op is registered
+       and the bucket is one the op's bucket fn can emit.
+XR107  every rule in a persisted policy JSON resolves to a registered
+       (op, backend) pair with a bucket the op can emit, and every tuning
+       kwarg in the rule is declared by that backend.
+XR108  lossy backends never appear in a policy unless the policy document
+       carries ``"allow_lossy": true`` — the "a latency win cannot
+       silently change numerics" contract, applied to persisted policies
+       (the autotuner itself already excludes lossy sweeps).
+====== ===================================================================
+
+Findings reuse :class:`repro.analysis.lint.Finding` with a synthetic
+``registry:…`` / ``policy:…`` path so the CLI renders one uniform report.
+"""
+from __future__ import annotations
+
+import inspect
+import json
+import os
+from typing import Iterable, List, Optional, Sequence
+
+from repro.analysis.lint import Finding
+from repro.core import autotune, xaif
+
+_AUDIT_RULES = {
+    "XR101": "op has no 'ref' backend",
+    "XR102": "tunable kwarg not honored by the backend signature",
+    "XR103": "backend declares no cost prior (cost_fn)",
+    "XR104": "supports predicate is not callable",
+    "XR105": "autotuner bucket has no measurement cell",
+    "XR106": "cell key does not resolve to a registered op/bucket",
+    "XR107": "policy rule does not resolve against the registry",
+    "XR108": "lossy backend in a policy without allow_lossy",
+}
+
+
+def _finding(rule: str, where: str, message: str, fixit: str) -> Finding:
+    return Finding(rule=rule, path=where, line=0, col=0,
+                   message=f"{message} [{_AUDIT_RULES[rule]}]", fixit=fixit)
+
+
+def _audit_entry(entry: xaif.BackendEntry) -> List[Finding]:
+    out: List[Finding] = []
+    where = f"registry:{entry.op}/{entry.name}"
+    try:
+        params = inspect.signature(entry.fn).parameters
+    except (TypeError, ValueError):
+        params = {}
+    for kwarg, candidates in entry.tunables:
+        p = params.get(kwarg)
+        if p is None or p.kind in (inspect.Parameter.POSITIONAL_ONLY,
+                                   inspect.Parameter.VAR_POSITIONAL):
+            out.append(_finding(
+                "XR102", where,
+                f"tunable '{kwarg}' is not a keyword parameter of the "
+                f"backend function",
+                "declare only kwargs the function actually accepts in "
+                "tunables={...}"))
+        elif (p.default is inspect.Parameter.empty
+              and p.kind != inspect.Parameter.VAR_KEYWORD):
+            out.append(_finding(
+                "XR102", where,
+                f"tunable '{kwarg}' has no default — dispatch without "
+                f"tuning params would crash",
+                "give the tunable kwarg a default value"))
+        if not candidates:
+            out.append(_finding(
+                "XR102", where,
+                f"tunable '{kwarg}' declares no candidate values",
+                "list at least one candidate, e.g. {'bm': (128, 256)}"))
+    if entry.cost_fn is None:
+        out.append(_finding(
+            "XR103", where, "no cost_fn",
+            "pass cost_fn=<op>_cost to xaif.register so the autotuner "
+            "prior and roofline reports cover this backend"))
+    if entry.supports is not None and not callable(entry.supports):
+        out.append(_finding(
+            "XR104", where, "supports= is not callable",
+            "pass a (shapes, dtype) -> bool predicate or omit it"))
+    return out
+
+
+def _audit_ops(findings: List[Finding]) -> None:
+    for op in xaif.ops():
+        if "ref" not in xaif.backends_for(op):
+            findings.append(_finding(
+                "XR101", f"registry:{op}", f"op '{op}' has no ref backend",
+                "register a pure-jnp oracle as ('" + op + "', 'ref') — it "
+                "is the numerics baseline and the dispatch fallback"))
+        for entry in xaif.entries_for(op):
+            findings.extend(_audit_entry(entry))
+
+
+def _audit_cells(findings: List[Finding]) -> None:
+    ops = set(xaif.ops())
+    for op in sorted(ops):
+        for bucket in xaif.op_buckets(op):
+            if (op, bucket) not in autotune.CELLS:
+                findings.append(_finding(
+                    "XR105", f"cells:{op}/{bucket}",
+                    f"no measurement cell for ({op}, {bucket})",
+                    "add a builder to autotune.CELLS (or pass cells= at "
+                    "autotune time) so the bucket gets tuned"))
+    for (op, bucket) in autotune.CELLS:
+        if op not in ops:
+            findings.append(_finding(
+                "XR106", f"cells:{op}/{bucket}",
+                f"cell references unregistered op '{op}'",
+                "register the op or drop the stale cell"))
+        elif bucket not in xaif.op_buckets(op):
+            findings.append(_finding(
+                "XR106", f"cells:{op}/{bucket}",
+                f"cell bucket '{bucket}' is not one of "
+                f"{xaif.op_buckets(op)}",
+                "use a bucket the op's bucket fn can emit"))
+
+
+def _audit_arch_cells(findings: List[Finding],
+                      archs: Sequence[str]) -> None:
+    from repro.configs.base import get_arch
+    ops = set(xaif.ops())
+    for name in archs:
+        try:
+            cfg = get_arch(name)
+        except KeyError:
+            findings.append(_finding(
+                "XR106", f"arch:{name}", f"unknown arch '{name}'",
+                "audit only arch names get_arch knows"))
+            continue
+        for (op, bucket) in autotune.arch_cells(cfg):
+            where = f"arch:{name}:{op}/{bucket}"
+            if op not in ops:
+                findings.append(_finding(
+                    "XR106", where,
+                    f"arch cell references unregistered op '{op}'",
+                    "register the op or fix arch_cells"))
+            elif bucket not in xaif.op_buckets(op):
+                findings.append(_finding(
+                    "XR106", where,
+                    f"arch cell bucket '{bucket}' is not one of "
+                    f"{xaif.op_buckets(op)}",
+                    "use a bucket the op's bucket fn can emit"))
+
+
+def _audit_policy_file(findings: List[Finding], path: str) -> None:
+    where = f"policy:{os.path.basename(path)}"
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        findings.append(_finding(
+            "XR107", where, f"unreadable policy JSON: {e}",
+            "regenerate the policy with AutotuneResult.persist"))
+        return
+    allow_lossy = bool(doc.get("allow_lossy", False))
+    ops = set(xaif.ops())
+    for rule in doc.get("rules", ()):
+        op = rule.get("op", "")
+        bucket = rule.get("bucket", "")
+        backend = rule.get("backend", "")
+        cell = f"{where}:{op}/{bucket}"
+        if op not in ops:
+            findings.append(_finding(
+                "XR107", cell, f"rule names unregistered op '{op}'",
+                "re-tune against the current registry"))
+            continue
+        if bucket != xaif.WILDCARD and bucket not in xaif.op_buckets(op):
+            findings.append(_finding(
+                "XR107", cell,
+                f"rule bucket '{bucket}' is not one of "
+                f"{xaif.op_buckets(op)} or '*'",
+                "re-tune against the current registry"))
+        if backend not in xaif.backends_for(op):
+            findings.append(_finding(
+                "XR107", cell,
+                f"rule backend '{backend}' is not registered for '{op}' "
+                f"(have {xaif.backends_for(op)})",
+                "re-tune against the current registry"))
+            continue
+        entry = xaif.get_entry(op, backend)
+        declared = set(entry.tunable_names)
+        for k in rule.get("tuning", {}):
+            if k not in declared:
+                findings.append(_finding(
+                    "XR107", cell,
+                    f"tuning kwarg '{k}' not declared by backend "
+                    f"'{backend}' (declares {sorted(declared)})",
+                    "re-tune; tuning params may only set declared "
+                    "tunables"))
+        if entry.lossy and not allow_lossy:
+            findings.append(_finding(
+                "XR108", cell,
+                f"lossy backend '{backend}' selected but the policy "
+                f"carries no allow_lossy marker",
+                "re-tune without lossy backends, or persist with "
+                "allow_lossy=True if the numerics change is intended"))
+
+
+_DEFAULT_ARCHS = ("chatglm3-6b",)
+
+
+def audit_registry(policy_paths: Iterable[str] = (),
+                   archs: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run every registry contract check; returns findings (empty = green).
+
+    ``policy_paths``: persisted policy JSONs to resolve against the live
+    registry. ``archs``: arch names whose :func:`autotune.arch_cells`
+    overlays to key-check (defaults to a representative arch; pass () to
+    skip, or an explicit list to widen).
+    """
+    xaif._ensure_builtin_backends()
+    findings: List[Finding] = []
+    _audit_ops(findings)
+    _audit_cells(findings)
+    _audit_arch_cells(findings,
+                      _DEFAULT_ARCHS if archs is None else archs)
+    for path in policy_paths:
+        _audit_policy_file(findings, path)
+    return sorted(findings, key=lambda f: (f.path, f.rule))

@@ -1,0 +1,281 @@
+"""Runtime trace-contract auditor for the serve stack.
+
+Serves a canned churn stream (admit → backfill → preempt/swap →
+spec-accept variation) through each engine configuration and checks the
+three runtime contracts the static linter cannot see:
+
+====== ===================================================================
+XT101  ZERO mid-stream decode retraces: the decode chunk is traced once
+       at warmup; page churn, backfill, preemption, swap restore and
+       speculative accept-length variation must all reuse that trace
+       (PR 3's "page churn never re-traces", now measured per config).
+XT102  ZERO implicit host transfers inside decode chunks: every chunk
+       after warmup runs under ``jax.transfer_guard("disallow")`` —
+       explicit ``jax.device_get``/``device_put`` (swap, snapshot) stay
+       legal because they are outside the decode call.
+XT103  donation actually happened: the decode jit declares
+       ``donate_argnums`` for (cache, state); after a call the input
+       buffers must be invalidated (``.is_deleted()``), otherwise every
+       chunk allocates a second cache.
+XT104  the harness itself must observe a real stream (decode ran, every
+       request finished or was explicitly rejected) — a vacuous pass is
+       a finding, not a success.
+====== ===================================================================
+
+Engine configurations audited: ``contiguous``, ``paged``, ``prefix``
+(prefix-sharing), ``overload`` (preemptive scheduler with host swap) and
+``spec`` (speculative decoding with a 1-layer draft, so accept lengths
+genuinely vary). ``chunk_hook`` is a test seam: it runs before every
+decode chunk and may perturb the engine (e.g. re-jit the decode fn) to
+prove a forced retrace is caught.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.analysis.lint import Finding
+
+_TRACE_RULES = {
+    "XT101": "mid-stream decode retrace",
+    "XT102": "implicit host transfer in a decode chunk",
+    "XT103": "decode inputs not donated",
+    "XT104": "trace-audit harness observed no real stream",
+}
+
+ENGINE_CONFIGS = ("contiguous", "paged", "prefix", "overload", "spec")
+
+
+@dataclasses.dataclass
+class TraceAuditReport:
+    """What one engine config's stream actually did."""
+
+    config: str
+    decode_calls: int = 0
+    decode_traces: int = 0
+    mid_stream_retraces: int = 0
+    transfer_violations: List[str] = dataclasses.field(default_factory=list)
+    donated_deleted: int = 0
+    donated_total: int = 0
+    served: int = 0
+    rejected: int = 0
+    error: str = ""
+
+
+def _finding(rule: str, config: str, message: str, fixit: str) -> Finding:
+    return Finding(rule=rule, path=f"trace:{config}", line=0, col=0,
+                   message=f"{message} [{_TRACE_RULES[rule]}]", fixit=fixit)
+
+
+def _base_cfg():
+    from repro.configs.base import get_arch
+    return get_arch("chatglm3-6b").reduced()
+
+
+def _run_for(cfg):
+    from repro.configs.base import AccelConfig, RunConfig, SHAPES_BY_NAME
+    return RunConfig(arch=cfg, shape=SHAPES_BY_NAME["decode_32k"],
+                     accel=AccelConfig())
+
+
+def _requests(cfg, n: int, seed: int = 0, max_prompt: int = 13,
+              max_new: int = 8, shared_prefix: int = 0,
+              priorities: bool = False):
+    from repro.serve.scheduler import Request
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, cfg.vocab_size, (shared_prefix,), dtype=np.int32)
+    reqs = []
+    for i in range(n):
+        suffix = rng.integers(0, cfg.vocab_size,
+                              (int(rng.integers(2, max_prompt)),),
+                              dtype=np.int32)
+        prompt = np.concatenate([base, suffix]) if shared_prefix else suffix
+        kw = {}
+        if priorities:
+            kw["priority"] = int(rng.integers(0, 3))
+        reqs.append(Request(rid=i, prompt=prompt,
+                            max_new_tokens=int(rng.integers(4, max_new + 1)),
+                            **kw))
+    return reqs
+
+
+def _build(config: str, params_seed: int = 0):
+    """(engine, params, requests, overload) for one named config."""
+    from repro.models import lm
+    from repro.serve.engine import SlotEngine, SpecConfig
+
+    cfg = _base_cfg()
+    if config == "spec":
+        # spec asserts early_exit is None; a 1-layer draft makes accept
+        # lengths vary chunk to chunk — the churn XT101 must survive
+        cfg = dataclasses.replace(cfg, early_exit=None)
+    run = _run_for(cfg)
+    params = lm.init_lm(jax.random.PRNGKey(params_seed), cfg)
+    overload = None
+    if config == "contiguous":
+        eng = SlotEngine(run, capacity=3, max_len=64, chunk=4)
+        reqs = _requests(cfg, 8)
+    elif config == "paged":
+        eng = SlotEngine(run, capacity=3, max_len=64, chunk=4, paged=True,
+                         page_size=8, num_pages=28)
+        reqs = _requests(cfg, 8)
+    elif config == "prefix":
+        eng = SlotEngine(run, capacity=3, max_len=64, chunk=4, paged=True,
+                         page_size=8, num_pages=40, prefix_sharing=True)
+        reqs = _requests(cfg, 8, shared_prefix=16)
+    elif config == "overload":
+        from repro.serve.overload import OverloadConfig
+        # a tight page pool under priority mix forces preemption + swap
+        eng = SlotEngine(run, capacity=3, max_len=64, chunk=4, paged=True,
+                         page_size=8, num_pages=14)
+        reqs = _requests(cfg, 10, max_prompt=40, max_new=12,
+                         priorities=True)
+        overload = OverloadConfig(mode="preempt", swap=True)
+    elif config == "spec":
+        draft = dataclasses.replace(
+            cfg, name=cfg.name + "-draft1l", num_layers=1,
+            block_pattern=cfg.block_pattern[:1])
+        eng = SlotEngine(run, capacity=3, max_len=32, chunk=2, paged=True,
+                         page_size=8,
+                         spec=SpecConfig(draft_arch=draft, k=3,
+                                         share_params=False))
+        reqs = _requests(cfg, 7, max_new=10)
+    else:
+        raise ValueError(f"unknown trace-audit config '{config}' "
+                         f"(have {ENGINE_CONFIGS})")
+    return eng, params, reqs, overload
+
+
+def _guarded_stream(engine, params, requests, overload,
+                    chunk_hook: Optional[Callable],
+                    report: TraceAuditReport) -> None:
+    """serve() with engine.decode wrapped: warmup chunk runs free, every
+    later chunk runs under transfer_guard("disallow") and is charged any
+    trace-count delta as a mid-stream retrace."""
+    from repro.serve.scheduler import serve
+
+    orig_decode = engine.decode          # bound method
+    state = {"chunk": 0}
+
+    def wrapped(p, cache, st):
+        i = state["chunk"]
+        state["chunk"] += 1
+        if chunk_hook is not None:
+            chunk_hook(engine, i)
+        before = engine.decode_traces
+        if i == 0:
+            return orig_decode(p, cache, st)
+        try:
+            with jax.transfer_guard("disallow"):
+                out = orig_decode(p, cache, st)
+        except RuntimeError as e:
+            if "transfer" not in str(e).lower():
+                raise
+            report.transfer_violations.append(f"chunk {i}: {e}")
+            out = orig_decode(p, cache, st)   # keep the stream moving
+        if engine.decode_traces > before:
+            report.mid_stream_retraces += engine.decode_traces - before
+        return out
+
+    engine.decode = wrapped
+    try:
+        rep = serve(engine, params, requests, overload=overload)
+    finally:
+        del engine.decode                # restore the class method
+    report.decode_calls = engine.decode_calls
+    report.decode_traces = engine.decode_traces
+    report.served = sum(1 for r in rep.requests if r.tokens)
+    report.rejected = sum(1 for r in rep.requests
+                          if r.reject_reason is not None)
+
+
+def _check_donation(engine, params, report: TraceAuditReport) -> None:
+    """One decode call on fresh buffers; the donated (cache, state) inputs
+    must come back invalidated. Runs after the stream so the call reuses
+    the existing trace (it must not count as a retrace)."""
+    cache, st = engine.init_state()
+    leaves = (jax.tree_util.tree_leaves(cache)
+              + jax.tree_util.tree_leaves(st))
+    leaves = [x for x in leaves if hasattr(x, "is_deleted")]
+    before = engine.decode_traces
+    engine.decode(params, cache, st)
+    report.donated_total = len(leaves)
+    report.donated_deleted = sum(1 for x in leaves if x.is_deleted())
+    if engine.decode_traces > before:
+        report.mid_stream_retraces += engine.decode_traces - before
+
+
+def _audit_one(config: str, chunk_hook: Optional[Callable],
+               report: TraceAuditReport) -> None:
+    engine, params, requests, overload = _build(config)
+    _guarded_stream(engine, params, requests, overload, chunk_hook, report)
+    _check_donation(engine, params, report)
+
+
+def _findings_for(report: TraceAuditReport) -> List[Finding]:
+    c = report.config
+    out: List[Finding] = []
+    if report.error:
+        out.append(_finding(
+            "XT104", c, f"stream crashed: {report.error}",
+            "run the config's serve path by hand; the audit only wraps "
+            "engine.decode"))
+        return out
+    if report.decode_calls == 0 or report.served == 0:
+        out.append(_finding(
+            "XT104", c,
+            f"vacuous stream (decode_calls={report.decode_calls}, "
+            f"served={report.served})",
+            "fix the canned request stream so the config actually "
+            "decodes"))
+    if report.mid_stream_retraces > 0:
+        out.append(_finding(
+            "XT101", c,
+            f"{report.mid_stream_retraces} decode retrace(s) after warmup "
+            f"(total traces {report.decode_traces} over "
+            f"{report.decode_calls} calls)",
+            "keep every chunk-to-chunk shape/dtype/static-arg identical; "
+            "churn must mutate buffers, never trace signatures"))
+    if report.transfer_violations:
+        out.append(_finding(
+            "XT102", c,
+            f"{len(report.transfer_violations)} implicit transfer(s): "
+            f"{report.transfer_violations[0]}",
+            "move the host access outside engine.decode or make it an "
+            "explicit jax.device_get/device_put"))
+    if report.donated_total and \
+            report.donated_deleted < report.donated_total // 2:
+        out.append(_finding(
+            "XT103", c,
+            f"only {report.donated_deleted}/{report.donated_total} input "
+            f"buffers invalidated after decode",
+            "check donate_argnums on the decode jit covers the cache and "
+            "state arguments"))
+    return out
+
+
+def audit_serve_configs(
+        configs: Optional[Sequence[str]] = None,
+        chunk_hook: Optional[Callable] = None,
+) -> Tuple[List[Finding], List[TraceAuditReport]]:
+    """Serve the canned churn stream per engine config; return
+    (findings, per-config reports). Empty findings = every contract held.
+
+    ``configs``: subset of :data:`ENGINE_CONFIGS` (default: all five).
+    ``chunk_hook``: ``(engine, chunk_index) -> None`` run before every
+    decode chunk — the seeded-violation test seam.
+    """
+    findings: List[Finding] = []
+    reports: List[TraceAuditReport] = []
+    for config in (configs or ENGINE_CONFIGS):
+        report = TraceAuditReport(config=config)
+        try:
+            _audit_one(config, chunk_hook, report)
+        except Exception as e:  # harness boundary: report, don't mask peers
+            report.error = f"{type(e).__name__}: {e}"
+        reports.append(report)
+        findings.extend(_findings_for(report))
+    return findings, reports

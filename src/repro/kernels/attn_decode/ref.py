@@ -41,7 +41,8 @@ def attn_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     b, hq, d = q.shape
     _, hkv, s, _ = k.shape
     g = hq // hkv
-    valid = jnp.arange(s)[None, :] <= cache_pos[:, None]    # [B, S]
+    valid = (jnp.arange(s, dtype=jnp.int32)[None, :]
+             <= cache_pos[:, None])                         # [B, S]
     scale_ = d ** -0.5 if scale is None else scale
     if precise:
         # fp32 throughout, post-scale — the MLA absorbed-decode numerics.

@@ -53,7 +53,8 @@ def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     np_ = page_table.shape[1]
     s = np_ * ps
     g = hq // hkv
-    valid = (jnp.arange(s)[None, :] <= cache_pos[:, None]) \
+    valid = (jnp.arange(s, dtype=jnp.int32)[None, :]
+             <= cache_pos[:, None]) \
         & jnp.repeat(page_table >= 0, ps, axis=1)           # [B, S]
     k = _gather(k_pages, page_table)
     v = _gather(v_pages, page_table)

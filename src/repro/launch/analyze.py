@@ -1,0 +1,117 @@
+"""Contract analyzer CLI: static lint + registry audit + trace audit.
+
+The CI gate for the stack's machine-checked contracts (CONTRACTS.md):
+
+  python -m repro.launch.analyze --lint --registry --trace-audit
+
+Exit status is the number of findings (0 = clean, capped at 125 so the
+shell never wraps it). Any subset of the three passes can be selected;
+with no selector flags all three run. ``--json PATH`` writes the findings
+plus per-config trace reports as a machine-readable artifact.
+
+  # lint only, two files
+  python -m repro.launch.analyze --lint --paths src/repro/serve/engine.py
+  # registry audit incl. a persisted policy
+  python -m repro.launch.analyze --registry --policy experiments/policy.json
+  # trace audit, paged + spec engines only
+  python -m repro.launch.analyze --trace-audit --configs paged,spec
+
+Suppress a lint finding inline with ``# analysis: disable=XH201`` (or
+``=all``), or a whole file with ``# analysis: disable-file=XH201`` in the
+first 10 lines — suppressions are for documented false positives, not for
+making the gate pass.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+from typing import List
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_DEFAULT_TREE = os.path.dirname(_HERE)          # src/repro
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.analyze",
+        description="static lint + XAIF registry audit + serve-stack "
+                    "trace-contract audit")
+    ap.add_argument("--lint", action="store_true",
+                    help="run the AST lint over src/repro/**")
+    ap.add_argument("--registry", action="store_true",
+                    help="run the XAIF registry/cells/policy audit")
+    ap.add_argument("--trace-audit", action="store_true",
+                    help="serve the canned churn streams and check the "
+                         "retrace/transfer/donation contracts")
+    ap.add_argument("--paths", nargs="*", default=None,
+                    help="lint these files instead of the whole tree")
+    ap.add_argument("--policy", nargs="*", default=(),
+                    help="persisted policy JSONs for the registry audit")
+    ap.add_argument("--archs", default=None,
+                    help="comma-separated arch names whose arch_cells the "
+                         "registry audit key-checks")
+    ap.add_argument("--configs", default=None,
+                    help="comma-separated trace-audit engine configs "
+                         "(default: all five)")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="write findings (and trace reports) to this path")
+    args = ap.parse_args(argv)
+
+    run_all = not (args.lint or args.registry or args.trace_audit)
+    findings: List = []
+    trace_reports = []
+
+    if args.lint or run_all:
+        from repro.analysis.lint import lint_paths, lint_tree
+        if args.paths:
+            found = lint_paths(args.paths)
+        else:
+            found = lint_tree(_DEFAULT_TREE)
+        print(f"[lint] {len(found)} finding(s)")
+        findings.extend(found)
+
+    if args.registry or run_all:
+        from repro.analysis.registry_audit import audit_registry
+        archs = (tuple(s for s in args.archs.split(",") if s)
+                 if args.archs is not None else None)
+        found = audit_registry(policy_paths=args.policy, archs=archs)
+        print(f"[registry] {len(found)} finding(s)")
+        findings.extend(found)
+
+    if args.trace_audit or run_all:
+        from repro.analysis.trace_audit import audit_serve_configs
+        configs = (tuple(s for s in args.configs.split(",") if s)
+                   if args.configs is not None else None)
+        found, trace_reports = audit_serve_configs(configs=configs)
+        for r in trace_reports:
+            print(f"[trace] {r.config}: traces={r.decode_traces} "
+                  f"calls={r.decode_calls} retraces={r.mid_stream_retraces} "
+                  f"transfers={len(r.transfer_violations)} "
+                  f"donated={r.donated_deleted}/{r.donated_total} "
+                  f"served={r.served}"
+                  + (f" ERROR={r.error}" if r.error else ""))
+        print(f"[trace] {len(found)} finding(s)")
+        findings.extend(found)
+
+    for f in findings:
+        print(f)
+
+    if args.json_out:
+        doc = {
+            "findings": [f.to_dict() for f in findings],
+            "trace_reports": [dataclasses.asdict(r) for r in trace_reports],
+        }
+        with open(args.json_out, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+        print(f"wrote {args.json_out}")
+
+    n = len(findings)
+    print(("CLEAN" if n == 0 else f"FAILED: {n} finding(s)"))
+    return min(n, 125)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -513,9 +513,20 @@ def main():
                 time.sleep(2)
             print("launch:", a, s, m)
             procs.append((subprocess.Popen(cmd), (a, s, m)))
+        failed = []
         for p, cell in procs:
             p.wait()
             print("done:", cell, "rc=", p.returncode)
+            if p.returncode != 0:
+                failed.append(cell)
+        if failed:
+            print(f"FAILED {len(failed)}/{len(procs)} cells:",
+                  file=sys.stderr)
+            for cell in failed:
+                print(f"  {'__'.join(cell)} "
+                      f"(see {os.path.join(out_dir, '__'.join(cell))}.json)",
+                      file=sys.stderr)
+            sys.exit(1)
         return
 
     assert args.arch and args.shape
@@ -543,9 +554,21 @@ def main():
             res["loss_chunk"] = args.loss_chunk
             res["wq8"] = args.wq8
             res["tag"] = args.tag
-        except Exception as e:
+        except (RuntimeError, ValueError, TypeError, KeyError,
+                AssertionError, NotImplementedError, MemoryError) as e:
+            # the failure classes a cell actually produces (XlaRuntimeError
+            # is a RuntimeError: compile/OOM; Value/Type/Assertion: config
+            # and sharding gates) — anything else is a driver bug and must
+            # crash loudly. The failing cell identity goes through the
+            # FaultEvent path so post-mortems see it alongside serve-time
+            # faults, and into the JSON report.
+            from repro.dist.fault import FaultEvent
+            ev = FaultEvent(kind="dryrun-cell", step=0,
+                            info=f"{args.arch}__{args.shape}__{m}: {e!r}")
             res = {"arch": args.arch, "shape": args.shape, "mesh": m,
                    "status": "error", "error": repr(e),
+                   "fault_events": [{"kind": ev.kind, "step": ev.step,
+                                     "info": ev.info, "t": ev.t}],
                    "traceback": traceback.format_exc()}
         with open(out_file, "w") as f:
             json.dump(res, f, indent=2, default=float)

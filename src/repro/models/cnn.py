@@ -170,8 +170,7 @@ def init_transformer(key, cfg: SeizureTransformerConfig) -> Dict:
 
 
 def _encoder_layer(p, x, cfg, policy):
-    from repro.kernels.rmsnorm.ref import rmsnorm_ref
-    h = rmsnorm_ref(x, p["ln1"])
+    h = xaif.call("rmsnorm", policy, x, p["ln1"])
     b, t, d = x.shape
     nh = cfg.num_heads
     dh = d // nh
@@ -181,7 +180,7 @@ def _encoder_layer(p, x, cfg, policy):
     out = xaif.call("attention", policy, q, k, v, causal=False)
     out = out.transpose(0, 2, 1, 3).reshape(b, t, d)
     x = x + out @ p["wo"]
-    h2 = rmsnorm_ref(x, p["ln2"])
+    h2 = xaif.call("rmsnorm", policy, x, p["ln2"])
     x = x + jax.nn.gelu(h2 @ p["w1"]) @ p["w2"]
     return x
 

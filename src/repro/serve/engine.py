@@ -87,7 +87,8 @@ def make_serve_step(run: RunConfig, gated: bool = False):
         else:
             logits, exit_lgs, new_cache = lm.forward_decode(
                 params, tokens, cfg, policy, cache)
-            if cfg.early_exit is not None and exit_lgs:
+            # exit_lgs is a Python list — its length is trace-static
+            if cfg.early_exit is not None and len(exit_lgs) > 0:
                 logits, exit_idx, info = merge_exit_logits(
                     logits, exit_lgs, cfg.early_exit, policy)
                 info["gated_fraction"] = gated_layer_fraction(
@@ -209,7 +210,7 @@ def init_decode_state(capacity: int, seed: int = 0) -> DecodeState:
         generated=jnp.zeros((capacity,), jnp.int32),
         budget=jnp.zeros((capacity,), jnp.int32),
         rng=jax.vmap(lambda i: jax.random.fold_in(base, i))(
-            jnp.arange(capacity)),
+            jnp.arange(capacity, dtype=jnp.int32)),
         exit_cnt=z, gated_layers=z, live_cnt=z,
         quarantined=jnp.zeros((capacity,), bool),
         realized=z, spec_prop=z, spec_acc=z)
@@ -464,7 +465,8 @@ def make_decode_chunk(run: RunConfig, steps: int, gated: bool = False,
         else:
             logits, exit_lgs, new_cache = lm.forward_decode(
                 params, st.tokens[:, None], cfg, policy, cache, live=live)
-            if cfg.early_exit is not None and exit_lgs:
+            # exit_lgs is a Python list — its length is trace-static
+            if cfg.early_exit is not None and len(exit_lgs) > 0:
                 logits, exit_idx, _ = merge_exit_logits(
                     logits, exit_lgs, cfg.early_exit, policy)
                 bounds = jnp.asarray(
@@ -703,7 +705,7 @@ def make_spec_decode_chunk(run: RunConfig, draft_cfg: ArchConfig, k: int,
         nreal = jnp.swapaxes(nreal, 0, 1)              # [S, steps]
         s = emits.shape[0]
         flat = emits.reshape(s, steps * k1)
-        valid = (jnp.arange(k1)[None, None, :]
+        valid = (jnp.arange(k1, dtype=jnp.int32)[None, None, :]
                  < nreal[:, :, None]).reshape(s, steps * k1)
         # left-pack the valid tokens, preserving emission order (argsort on
         # the invalid mask is stable), so the scheduler's

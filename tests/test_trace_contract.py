@@ -1,0 +1,81 @@
+"""Runtime trace contracts: the churn streams (backfill + preemption/swap
++ spec accept-length variation) must hit the decode trace exactly once —
+zero compilation-cache misses after warmup — with zero implicit host
+transfers and donated inputs actually invalidated; and the auditor must
+CATCH a forced retrace (the seeded-violation half of the CI gate)."""
+import jax
+import pytest
+
+from repro.analysis.trace_audit import (ENGINE_CONFIGS, audit_serve_configs)
+
+
+def _report(reports, config):
+    return next(r for r in reports if r.config == config)
+
+
+# ---------------------------------------------------------------------------
+# The runtime half of PR 3's "page churn never re-traces": paged engine
+# under backfill, overload engine under preemption + host swap, spec
+# engine under accept-length variation (1-layer untied draft).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("config", ["paged", "overload", "spec"])
+def test_zero_cache_misses_after_warmup(config):
+    findings, reports = audit_serve_configs(configs=(config,))
+    assert findings == [], "\n".join(str(f) for f in findings)
+    r = _report(reports, config)
+    assert r.error == ""
+    # one trace total == zero compilation-cache misses after warmup
+    assert r.decode_traces == 1, r
+    assert r.mid_stream_retraces == 0, r
+    assert r.decode_calls > 1, "stream too short to observe churn"
+    assert r.transfer_violations == [], r
+    # donation held: every donated input buffer was invalidated
+    assert r.donated_total > 0 and r.donated_deleted == r.donated_total, r
+    assert r.served > 0, r
+
+
+def test_contiguous_and_prefix_also_clean():
+    findings, reports = audit_serve_configs(
+        configs=("contiguous", "prefix"))
+    assert findings == [], "\n".join(str(f) for f in findings)
+    for r in reports:
+        assert r.decode_traces == 1 and r.served > 0, r
+
+
+def test_engine_config_list_is_the_contract():
+    # the CI gate text promises all five; keep the constant honest
+    assert set(ENGINE_CONFIGS) == {
+        "contiguous", "paged", "prefix", "overload", "spec"}
+
+
+# ---------------------------------------------------------------------------
+# Seeded violation: a forced mid-stream retrace must be caught
+# ---------------------------------------------------------------------------
+
+
+def test_forced_retrace_is_caught():
+    def hook(engine, chunk_idx):
+        if chunk_idx == 2:
+            # dropping the compiled trace forces the next call to
+            # re-trace: exactly the failure mode the audit exists for
+            engine._decode.clear_cache()
+
+    findings, reports = audit_serve_configs(configs=("paged",),
+                                            chunk_hook=hook)
+    r = reports[0]
+    assert r.mid_stream_retraces >= 1, r
+    assert any(f.rule == "XT101" for f in findings), findings
+
+
+def test_chunk_hook_runs_before_warmup_too():
+    seen = []
+
+    def hook(engine, chunk_idx):
+        seen.append(chunk_idx)
+
+    findings, reports = audit_serve_configs(configs=("contiguous",),
+                                            chunk_hook=hook)
+    assert findings == [] and seen and seen[0] == 0
+    assert reports[0].decode_calls == len(seen)
